@@ -1,0 +1,62 @@
+"""Fig. 4 analogue: embedding-generation vs storage-load latency across
+cluster sizes; reports the break-even point (paper: ~24 kchars ≈ 8 ktokens).
+
+Also measures the REAL embedder wall time on this machine across cluster
+sizes (relative curve), plus the v5e-adapted break-even from roofline
+constants (DESIGN.md assumption change #2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.costs import BYTES_PER_EMBEDDING_F32, EdgeCostModel
+from repro.data.embedder import HashingEmbedder
+from repro.launch.mesh import V5E_HBM_BW, V5E_PEAK_BF16_FLOPS
+
+
+def run():
+    cost = EdgeCostModel()
+    chunk_chars = 300
+    breakeven = None
+    for n_chars in (1_000, 3_000, 8_000, 16_000, 24_000, 48_000, 96_000,
+                    200_000):
+        n_chunks = max(1, n_chars // chunk_chars)
+        nbytes = n_chunks * BYTES_PER_EMBEDDING_F32
+        gen_s = cost.embed_latency(n_chars)
+        # Fig. 4's load side: scattered per-chunk reads of an IVF layout
+        load_s = cost.storage_seek_s + nbytes / cost.storage_rand_bw_bytes_per_sec
+        if breakeven is None and gen_s < load_s:
+            pass
+        emit(f"fig4/cluster_{n_chars}chars/gen_s", gen_s * 1e6,
+             f"load_s={load_s:.4f};gen_faster={gen_s < load_s}")
+    # break-even char count where gen == load
+    # gen = fixed + c/rate ; load = seek + c/chunk*3072/bw
+    per_char_load = BYTES_PER_EMBEDDING_F32 / chunk_chars / cost.storage_rand_bw_bytes_per_sec
+    per_char_gen = 1.0 / cost.embed_chars_per_sec
+    c_star = (cost.embed_fixed_s - cost.storage_seek_s) / (per_char_load - per_char_gen)
+    emit("fig4/breakeven_chars", 0.0,
+         f"chars={c_star:.0f};paper=24000;"
+         f"tokens={c_star/3:.0f};paper_tokens=8000")
+
+    # real embedder wall-time curve (relative shape on this CPU)
+    emb = HashingEmbedder(dim=64)
+    for n_chunks in (4, 16, 64):
+        texts = ["x" * chunk_chars] * n_chunks
+        us = time_fn(lambda: emb.embed(texts), iters=3)
+        emit(f"fig4/real_embed_{n_chunks}chunks", us,
+             f"chars={n_chunks*chunk_chars}")
+
+    # TPU v5e adaptation: gen is compute-bound (2*N flops/token on MXU),
+    # "load" is host->HBM DMA at PCIe ~ 8 GB/s per host
+    gte_flops_per_token = 2 * 137e6
+    v5e_gen_per_chunk = 75 * gte_flops_per_token / V5E_PEAK_BF16_FLOPS
+    pcie_load_per_chunk = BYTES_PER_EMBEDDING_F32 / 8e9
+    emit("fig4/v5e_gen_vs_hostload_per_chunk_us",
+         v5e_gen_per_chunk * 1e6,
+         f"host_load_us={pcie_load_per_chunk*1e6:.3f};"
+         f"gen_faster={v5e_gen_per_chunk < pcie_load_per_chunk}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle wall time.
+
+Interpret-mode numbers are CORRECTNESS-path timings on CPU — the TPU perf
+story lives in the §Roofline analysis; these rows exist to (a) regression-
+track the op dispatch overhead and (b) keep a measured record that the jnp
+fallback is the right CPU default."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ivf_topk.kernel import topk_ip_pallas
+from repro.kernels.ivf_topk.ref import topk_ip_ref
+import jax
+
+RNG = np.random.default_rng(0)
+
+
+def _r(shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+def run():
+    # ivf_topk: the retrieval hot loop
+    for n in (1_000, 10_000):
+        embs, q = _r((n, 768)), _r((1, 768))
+        ref = jax.jit(lambda e, qq: topk_ip_ref(e, qq, 10))
+        us_ref = time_fn(lambda: jax.block_until_ready(ref(embs, q)))
+        us_pal = time_fn(lambda: jax.block_until_ready(
+            topk_ip_pallas(embs, q, 10, interpret=True)), iters=2)
+        emit(f"kernels/ivf_topk/n{n}/ref_jit", us_ref,
+             f"pallas_interpret_us={us_pal:.0f}")
+
+    # flash attention prefill block
+    q, k, v = _r((1, 8, 512, 64)), _r((1, 2, 512, 64)), _r((1, 2, 512, 64))
+    ref = jax.jit(lambda a, b, c: flash_attention_ref(a, b, c))
+    us = time_fn(lambda: jax.block_until_ready(ref(q, k, v)))
+    emit("kernels/flash_attention/s512_h8_gqa4/ref_jit", us,
+         "pallas_validated_in_tests=true")
+
+    # decode attention vs 32k cache
+    qd = _r((4, 8, 64))
+    kc, vc = _r((4, 4096, 2, 64)), _r((4, 4096, 2, 64))
+    refd = jax.jit(lambda a, b, c: decode_attention_ref(a, b, c, 4096))
+    us = time_fn(lambda: jax.block_until_ready(refd(qd, kc, vc)))
+    emit("kernels/decode_attention/cache4k/ref_jit", us,
+         "pallas_validated_in_tests=true")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Fig. 3 analogue: RAG latency breakdown (retrieval / prefill) and embedded
+database size per BEIR dataset, Flat vs IVF, at paper scale via the edge
+cost model."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.data.synthetic import BEIR_SPECS
+from repro.serving.simulator import EdgeSimulator
+
+
+def run(n_queries: int = 200):
+    for ds, spec in BEIR_SPECS.items():
+        sim = EdgeSimulator(ds, n_queries=n_queries)
+        for cfg in ("flat", "ivf"):
+            r = sim.run(cfg)
+            prefill = r.mean_ttft_s - r.mean_retrieval_s
+            emit(f"fig3/{ds}/{cfg}/retrieval_s", r.mean_retrieval_s * 1e6,
+                 f"prefill_s={prefill:.3f};ttft_s={r.mean_ttft_s:.3f};"
+                 f"db_gib={spec.emb_bytes/2**30:.2f};"
+                 f"fits={spec.fits_in_memory}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Fig. 10 analogue: precision / recall of the two-level index vs the Flat
+baseline across datasets, with the §6.2 hyperparameter tuning (nprobe and k
+chosen to normalize recall against Flat)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import EdgeCostModel, FlatIndex, IVFIndex
+from repro.data.synthetic import scaled_beir
+
+DATASETS = ("scidocs", "fiqa", "quora", "nq", "hotpotqa", "fever")
+
+
+def pr_at_k(ds, ids, qi, k):
+    rel = ds.relevant(qi)
+    got = [i for i in ids[:k] if i >= 0]
+    tp = sum(1 for i in got if i in rel)
+    precision = tp / max(len(got), 1)
+    recall = tp / max(min(len(rel), k), 1)
+    return precision, recall
+
+
+def run(n_records: int = 2000, n_queries: int = 60, k: int = 10):
+    for name in DATASETS:
+        ds = scaled_beir(name, n_records=n_records, n_queries=n_queries)
+        cost = EdgeCostModel()
+        flat = FlatIndex(ds.embeddings.shape[1], cost)
+        flat.add(ds.embeddings, ds.chunk_ids)
+        ivf = IVFIndex(ds.embeddings.shape[1], cost)
+        nlist = max(32, ds.n // 32)
+        ivf.build(ds.embeddings, ds.chunk_ids, nlist=nlist)
+
+        # §6.2: tune nprobe to normalize recall-vs-flat
+        flat_ids = [flat.search(ds.query_embs[qi], k)[0][0]
+                    for qi in range(n_queries)]
+        chosen = None
+        for nprobe in (1, 2, 4, 8, 16, 32, nlist):
+            overlap = np.mean([
+                len(set(flat_ids[qi].tolist())
+                    & set(ivf.search(ds.query_embs[qi], k, nprobe)[0][0]
+                          .tolist())) / k
+                for qi in range(n_queries)])
+            chosen = nprobe
+            if overlap >= 0.95:
+                break
+        stats = {"flat": [], "ivf": []}
+        for qi in range(n_queries):
+            pf, rf = pr_at_k(ds, flat_ids[qi].tolist(), qi, k)
+            ii = ivf.search(ds.query_embs[qi], k, chosen)[0][0].tolist()
+            pi_, ri = pr_at_k(ds, ii, qi, k)
+            stats["flat"].append((pf, rf))
+            stats["ivf"].append((pi_, ri))
+        for cfg, vals in stats.items():
+            p = np.mean([v[0] for v in vals])
+            r = np.mean([v[1] for v in vals])
+            emit(f"fig10/{name}/{cfg}", 0.0,
+                 f"precision={p:.3f};recall={r:.3f};nprobe={chosen};"
+                 f"recall_vs_flat_gap={abs(r - np.mean([v[1] for v in stats['flat']])):.3f}")
+
+
+if __name__ == "__main__":
+    run()

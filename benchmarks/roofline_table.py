@@ -1,0 +1,36 @@
+"""§Roofline table: reads experiments/dryrun/*.json (produced by
+launch/dryrun.py) and emits one row per (arch × shape × mesh) baseline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__),
+                          "..", "experiments", "dryrun")
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        emit("roofline/NO_DRYRUN_RESULTS", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        r = d["roofline"]
+        tag = f"__{d['tag']}" if d.get("tag") else ""
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}{tag}/bound_step_ms",
+             r["bound_step_ms"] * 1e3,
+             f"dominant={r['dominant']};compute_ms={r['compute_ms']:.3f};"
+             f"memory_ms={r['memory_ms']:.3f};"
+             f"collective_ms={r['collective_ms']:.3f};"
+             f"useful_ratio={r['useful_ratio']:.3f};"
+             f"mfu_at_bound={r['mfu_at_bound']:.4f}")
+
+
+if __name__ == "__main__":
+    run()

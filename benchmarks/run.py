@@ -1,0 +1,52 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows.  ``python -m benchmarks.run [--only fig13] [--quick]``
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (embed_gen_rate, gen_cost_distribution,
+                        generation_quality, kernels, latency_breakdown,
+                        retrieval_quality, roofline_table, tail_latency,
+                        threshold_sweep, ttft)
+
+SUITES = {
+    "fig3_latency_breakdown": latency_breakdown.run,
+    "fig4_embed_gen_rate": embed_gen_rate.run,
+    "fig5_gen_cost_distribution": gen_cost_distribution.run,
+    "fig7_threshold_sweep": threshold_sweep.run,
+    "fig10_retrieval_quality": retrieval_quality.run,
+    "fig11_generation_quality": generation_quality.run,
+    "fig12_tail_latency": tail_latency.run,
+    "fig13_ttft": ttft.run,
+    "kernels": kernels.run,
+    "roofline": roofline_table.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="substring filter over suite names")
+    args = ap.parse_args()
+    failures = []
+    for name, fn in SUITES.items():
+        if args.only and args.only not in name:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,63 @@
+"""Online index maintenance (§5.4): insertion, removal, cluster split and
+merge — with the SLO-driven storage invariant checked live.
+
+    PYTHONPATH=src python examples/online_update.py
+"""
+import numpy as np
+
+from repro.core import EdgeCostModel, EdgeRAGIndex
+from repro.data import generate_dataset
+
+
+def show(index, label):
+    s = index.stats()
+    print(f"[{label}] clusters={s['active_clusters']} chunks={s['ntotal']} "
+          f"stored={s['stored_clusters']} "
+          f"mem={s['memory_bytes']/1024:.1f}KiB "
+          f"storage={s['storage_bytes']/1024:.1f}KiB")
+
+
+def main():
+    ds = generate_dataset(n_records=1000, dim=48, n_topics=32,
+                          n_queries=10, seed=1)
+    index = EdgeRAGIndex(48, ds.embedder, ds.get_chunks, EdgeCostModel(),
+                         slo_s=0.25, split_max_chars=40_000)
+    index.build(ds.chunk_ids, ds.texts, nlist=32, embeddings=ds.embeddings)
+    show(index, "built")
+
+    # --- insertions: stream new chunks into the nearest clusters ---
+    rng = np.random.default_rng(0)
+    next_id = 10_000
+    for i in range(200):
+        base = ds.embeddings[rng.integers(ds.n)]
+        emb = base + 0.05 * rng.standard_normal(48)
+        emb = (emb / np.linalg.norm(emb)).astype(np.float32)
+        text = f"doc-{next_id} " + "new content " * rng.integers(3, 30)
+        ds.add_chunk(next_id, text, emb)
+        index.insert(next_id, text)
+        next_id += 1
+    show(index, "after 200 inserts")
+
+    # SLO invariant: stored == (regeneration cost over SLO)
+    bad = [c for c in index.clusters
+           if c.active and c.stored != (c.gen_latency_est > index.slo_s)]
+    print(f"  Alg-1 invariant violations: {len(bad)}")
+
+    # --- removal until clusters merge ---
+    victim_cluster = max((c for c in index.clusters if c.active),
+                         key=lambda c: c.size)
+    n_before = index.nlist
+    for cid_ in list(victim_cluster.ids[:-1]):
+        index.remove(int(cid_))
+    show(index, "after draining one cluster")
+    print(f"  first-level entries: {n_before} -> {index.nlist} "
+          f"(active {sum(c.active for c in index.clusters)})")
+
+    # retrieval still works
+    ids, _, lat = index.search(ds.query_embs[0], 5, 4)
+    print(f"  post-update search -> {ids[0].tolist()} "
+          f"({lat.retrieval_s*1e3:.0f} ms edge)")
+
+
+if __name__ == "__main__":
+    main()

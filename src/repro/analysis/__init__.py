@@ -1,0 +1,2 @@
+from repro.analysis.hlo import collective_bytes  # noqa
+from repro.analysis.roofline import RooflineReport, roofline  # noqa

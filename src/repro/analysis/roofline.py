@@ -1,0 +1,139 @@
+"""Three-term roofline from the dry-run's compiled artifact (TPU v5e).
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_bytes / ICI link bw   (per chip)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` of the SPMD-partitioned
+module (already per-device); collective bytes from the HLO parser.  The
+dominant term is the bottleneck the §Perf loop iterates on.  MODEL_FLOPS =
+6·N·D (dense) or 6·N_active·D uses the config's analytic param count; the
+useful-compute ratio MODEL_FLOPS / (HLO_FLOPs × chips) flags remat and
+redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.launch.mesh import (V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_BF16_FLOPS)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-chip terms (seconds)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # raw inputs
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_by_op: Dict[str, float]
+    model_flops: float
+    useful_compute_ratio: float
+    bytes_per_chip_peak: Optional[float] = None   # memory_analysis if avail.
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline lower bound (no overlap assumption: max of terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline bound."""
+        if self.step_time_s <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / self.step_time_s
+                / V5E_PEAK_BF16_FLOPS)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_ms": self.compute_s * 1e3,
+            "memory_ms": self.memory_s * 1e3,
+            "collective_ms": self.collective_s * 1e3,
+            "dominant": self.dominant,
+            "hlo_gflops_per_chip": self.hlo_flops_per_chip / 1e9,
+            "hlo_gbytes_per_chip": self.hlo_bytes_per_chip / 1e9,
+            "coll_mbytes_per_chip": self.collective_bytes_per_chip / 1e6,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_ratio": self.useful_compute_ratio,
+            "bound_step_ms": self.step_time_s * 1e3,
+            "mfu_at_bound": self.mfu,
+        }
+
+
+def roofline(*, arch: str, shape: str, mesh_name: str, chips: int,
+             hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+             collective_by_op: Dict[str, float], model_flops: float,
+             peak_flops: float = V5E_PEAK_BF16_FLOPS,
+             hbm_bw: float = V5E_HBM_BW, ici_bw: float = V5E_ICI_BW,
+             bytes_peak: Optional[float] = None) -> RooflineReport:
+    """hlo_flops / hlo_bytes / collective_bytes are PER-CHIP quantities."""
+    compute_s = hlo_flops / peak_flops
+    memory_s = hlo_bytes / hbm_bw
+    collective_s = collective_bytes / ici_bw
+    useful = model_flops / max(hlo_flops * chips, 1.0)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        hlo_flops_per_chip=hlo_flops, hlo_bytes_per_chip=hlo_bytes,
+        collective_bytes_per_chip=collective_bytes,
+        collective_by_op=collective_by_op, model_flops=model_flops,
+        useful_compute_ratio=useful, bytes_per_chip_peak=bytes_peak)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6·N·D for training; 2·N·D for inference forward (per step).
+
+    N = active params (MoE counts routed experts only).  D = tokens
+    processed by the step: B·S for train/prefill, B for one decode step.
+    Attention FLOPs (the O(S²) term) are added explicitly.
+    """
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        base = 6.0 * n_active * tokens
+        attn_mult = 3.0  # fwd + bwd
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        base = 2.0 * n_active * tokens
+        attn_mult = 1.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        base = 2.0 * n_active * tokens
+        attn_mult = 1.0
+    # attention score+AV FLOPs: 4 · B · Sq · ctx_avg · (H·Dh) per layer
+    from repro.configs.shapes import LONG_CONTEXT_WINDOW
+    attn_flops = 0.0
+    for kind in cfg.block_pattern:
+        if kind not in ("attn", "swa", "shared_attn", "moe", "swa_moe"):
+            continue
+        if shape.kind == "decode":
+            sq = 1
+            ctx = shape.seq_len
+            if shape.sliding_window_mode:
+                ctx = min(ctx, LONG_CONTEXT_WINDOW)
+            if kind in ("swa", "swa_moe") and cfg.sliding_window:
+                ctx = min(ctx, cfg.sliding_window)
+        else:
+            sq = shape.seq_len
+            if kind in ("swa", "swa_moe") and cfg.sliding_window:
+                ctx = min(cfg.sliding_window, shape.seq_len)
+            else:
+                ctx = shape.seq_len / 2.0          # causal average
+        attn_flops += (4.0 * shape.global_batch * sq * ctx * cfg.q_dim
+                       * cfg.depth_repeat)
+    return base + attn_mult * attn_flops

@@ -1,0 +1,37 @@
+"""Config registry.  ``--arch <id>`` ids use dashes; module files use
+underscores.  ``load_all()`` imports every config module so the registry is
+populated."""
+from repro.configs.base import ModelConfig, get_config, list_configs, register  # noqa
+from repro.configs.shapes import INPUT_SHAPES, InputShape, get_shape, LONG_CONTEXT_WINDOW  # noqa
+
+ASSIGNED_ARCHS = (
+    "granite-moe-3b-a800m",
+    "musicgen-large",
+    "qwen2-vl-2b",
+    "starcoder2-7b",
+    "yi-9b",
+    "zamba2-2.7b",
+    "rwkv6-1.6b",
+    "stablelm-1.6b",
+    "gemma3-12b",
+    "olmoe-1b-7b",
+)
+
+PAPER_MODELS = ("gte-base-en-v1.5", "sheared-llama-2.7b")
+
+_LOADED = False
+
+
+def load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    from repro.configs import (  # noqa: F401
+        granite_moe_3b_a800m, musicgen_large, qwen2_vl_2b, starcoder2_7b,
+        yi_9b, zamba2_2p7b, rwkv6_1p6b, stablelm_1p6b, gemma3_12b,
+        olmoe_1b_7b, paper_models,
+    )
+    _LOADED = True
+
+
+load_all()

@@ -1,0 +1,16 @@
+"""EdgeRAG core: the paper's contribution.
+
+Index zoo (Table 4):
+  FlatIndex              exhaustive baseline
+  IVFIndex               two-level, all embeddings resident
+  EdgeRAGIndex           pruned second level + selective storage + caching
+                         (flags give the IVF+Gen / IVF+Gen+Load ablations)
+"""
+from repro.core.cache_policy import (CostAwareLFUCache,  # noqa
+                                     MinLatencyThresholdController)
+from repro.core.costs import EdgeCostModel, LatencyBreakdown  # noqa
+from repro.core.edgerag import EdgeCluster, EdgeRAGIndex  # noqa
+from repro.core.flat_index import FlatIndex  # noqa
+from repro.core.ivf_index import IVFIndex  # noqa
+from repro.core.kmeans import kmeans  # noqa
+from repro.core.storage import StorageBackend  # noqa

@@ -1,0 +1,136 @@
+"""EdgeRAG's caching policy — faithful implementations of the paper's
+Algorithm 2 (Cost-aware Least-Frequently-Used replacement) and Algorithm 3
+(adaptive Minimum Latency Caching Threshold).
+
+Algorithm 2 as printed contains an obvious typo (``minCost``/``maxCost``
+mixed up inside the eviction scan); we implement the stated intent: evict
+the cached cluster with the MINIMUM ``genLatency × counter`` weight — cheap
+to regenerate and rarely used goes first.  After every access all counters
+decay by ``decay_factor`` so stale frequency evidence ages out.
+
+Algorithm 3: the threshold starts at 0 (cache everything).  On a cache miss
+whose overall retrieval latency beat the moving average, the threshold is
+RAISED (the miss was affordable — stop caching cheap clusters); on a cache
+hit it is LOWERED (hits are valuable — admit more).  Clusters whose
+generation latency falls below the threshold are neither admitted nor kept.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    embeddings: np.ndarray
+    gen_latency: float
+    counter: float = 1.0
+
+    @property
+    def nbytes(self) -> int:
+        return self.embeddings.nbytes
+
+
+class CostAwareLFUCache:
+    """Algorithm 2. Capacity in bytes (the paper reports ~7% of system mem)."""
+
+    def __init__(self, capacity_bytes: int, decay_factor: float = 0.99):
+        self.capacity_bytes = capacity_bytes
+        self.decay_factor = decay_factor
+        self._entries: Dict[int, CacheEntry] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ---- Alg. 2 ----
+    def access(self, cluster_id: int) -> Optional[np.ndarray]:
+        """Lookup; bumps the counter on hit, decays all counters."""
+        entry = self._entries.get(cluster_id)
+        if entry is not None:
+            entry.counter += 1.0
+            self.hits += 1
+            out = entry.embeddings
+        else:
+            self.misses += 1
+            out = None
+        self._decay()
+        return out
+
+    def insert(self, cluster_id: int, embeddings: np.ndarray,
+               gen_latency: float, min_latency_threshold: float = 0.0):
+        """Insert after a miss+regeneration, honoring the Alg. 3 threshold."""
+        if gen_latency < min_latency_threshold:
+            return  # not worth caching — cheap to regenerate (Alg. 3)
+        nbytes = embeddings.nbytes
+        if nbytes > self.capacity_bytes:
+            return
+        while self.total_bytes() + nbytes > self.capacity_bytes:
+            if not self._evict_one():
+                return
+        self._entries[cluster_id] = CacheEntry(
+            embeddings=np.ascontiguousarray(embeddings, np.float32),
+            gen_latency=float(gen_latency))
+
+    def _evict_one(self) -> bool:
+        if not self._entries:
+            return False
+        evict_id = min(self._entries,
+                       key=lambda i: (self._entries[i].gen_latency
+                                      * self._entries[i].counter))
+        del self._entries[evict_id]
+        self.evictions += 1
+        return True
+
+    def _decay(self):
+        for e in self._entries.values():
+            e.counter *= self.decay_factor
+
+    # ---- maintenance used by Alg. 3's "evicts and prevents caching" ----
+    def drop_below_threshold(self, threshold: float):
+        for cid in [c for c, e in self._entries.items()
+                    if e.gen_latency < threshold]:
+            del self._entries[cid]
+            self.evictions += 1
+
+    def invalidate(self, cluster_id: int):
+        self._entries.pop(cluster_id, None)
+
+    def total_bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    def __contains__(self, cluster_id: int) -> bool:
+        return cluster_id in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class MinLatencyThresholdController:
+    """Algorithm 3.  ``step_s`` is the +-/-- increment in seconds."""
+
+    def __init__(self, step_s: float = 0.010, ema_alpha: float = 0.1):
+        self.threshold = 0.0
+        self.step_s = step_s
+        self.alpha = ema_alpha
+        self.moving_avg_latency = 0.0
+        self._initialized = False
+
+    def observe(self, cache_miss: bool, last_latency: float) -> float:
+        if not self._initialized:
+            self.moving_avg_latency = last_latency
+            self._initialized = True
+        if cache_miss:
+            if last_latency < self.moving_avg_latency:
+                self.threshold += self.step_s
+        else:
+            self.threshold = max(0.0, self.threshold - self.step_s)
+        self.moving_avg_latency = ((1 - self.alpha) * self.moving_avg_latency
+                                   + self.alpha * last_latency)
+        return self.threshold

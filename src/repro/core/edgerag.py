@@ -1,0 +1,342 @@
+"""EdgeRAG index — the paper's contribution (§4, §5).
+
+Improves the two-level IVF index for memory-constrained serving:
+
+  1. PRUNE second-level embeddings (they are generated at indexing time for
+     clustering, then discarded) and regenerate them online at retrieval.
+  2. SELECTIVE INDEX STORAGE (Alg. 1): clusters whose regeneration latency
+     would exceed the SLO get their embeddings precomputed and persisted to
+     storage; loads bypass the long tail of online generation.
+  3. ADAPTIVE COST-AWARE CACHING (Alg. 2 + 3): regenerated embeddings are
+     cached under a cost-weighted LFU policy with an adaptive minimum-
+     latency admission threshold.
+  4. Online INSERT / REMOVE with cluster split / merge (§5.4).
+
+Retrieval (Fig. 9): probe centroids → per probed cluster resolve embeddings
+via storage / cache / regeneration → fused top-k → chunk ids.
+
+Table 4 ablations map to constructor flags:
+  IVF+Embed.Gen.        store_heavy=False  cache_bytes=0
+  IVF+Embed.Gen.+Load   store_heavy=True   cache_bytes=0
+  EdgeRAG               store_heavy=True   cache_bytes>0
+Retrieval results are bit-identical across the three (and to the in-memory
+IVF baseline): the paper's §6.3.1 claim, asserted in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cache_policy import (CostAwareLFUCache,
+                                     MinLatencyThresholdController)
+from repro.core.costs import EdgeCostModel, LatencyBreakdown, WallTimer
+from repro.core.kmeans import kmeans
+from repro.core.storage import StorageBackend
+from repro.kernels.ivf_topk.ops import topk_ip
+
+
+@dataclasses.dataclass
+class EdgeCluster:
+    ids: np.ndarray                 # (n,) chunk ids
+    char_count: int                 # total chars across chunks
+    gen_latency_est: float          # profiled regeneration latency (Alg. 1)
+    stored: bool = False            # embeddings persisted to storage
+    active: bool = True             # tombstone after merge
+
+    @property
+    def size(self) -> int:
+        return len(self.ids)
+
+
+class EdgeRAGIndex:
+    """Two-level pruned IVF with selective storage + adaptive caching."""
+
+    def __init__(self, dim: int, embed_fn: Callable[[Sequence[str]], np.ndarray],
+                 get_chunks: Callable[[Sequence[int]], List[str]],
+                 cost_model: Optional[EdgeCostModel] = None,
+                 *, slo_s: float = 1.0,
+                 store_heavy: bool = True,
+                 cache_bytes: Optional[int] = None,
+                 storage_mode: str = "memory",
+                 split_max_chars: int = 200_000,
+                 merge_min_size: int = 2):
+        self.dim = dim
+        self.embed_fn = embed_fn
+        self.get_chunks = get_chunks
+        self.cost = cost_model or EdgeCostModel()
+        self.slo_s = slo_s
+        self.store_heavy = store_heavy
+        if cache_bytes is None:
+            cache_bytes = int(0.07 * self.cost.device_memory_bytes)  # §6.3.4
+        self.cache = CostAwareLFUCache(cache_bytes)
+        self.threshold = MinLatencyThresholdController()
+        self.storage = StorageBackend(storage_mode)
+        self.centroids: Optional[np.ndarray] = None
+        self.clusters: List[EdgeCluster] = []
+        self.split_max_chars = split_max_chars
+        self.merge_min_size = merge_min_size
+        self._chunk_chars: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------
+    # indexing (Fig. 8 + Alg. 1)
+    # ------------------------------------------------------------------
+    def build(self, chunk_ids: Sequence[int], texts: Sequence[str],
+              nlist: int, kmeans_iters: int = 20, seed: int = 0,
+              embeddings: Optional[np.ndarray] = None):
+        """Index a corpus.  ``embeddings`` may be passed if already computed
+        (the paper computes them once for clustering, then prunes)."""
+        chunk_ids = np.asarray(chunk_ids, np.int64)
+        if embeddings is None:
+            embeddings = self.embed_fn(list(texts))
+        embeddings = np.ascontiguousarray(embeddings, np.float32)
+        self._chunk_chars.update(
+            {int(i): len(t) for i, t in zip(chunk_ids, texts)})
+        self.centroids, assign = kmeans(embeddings, nlist,
+                                        iters=kmeans_iters, seed=seed)
+        self.clusters = []
+        for c in range(self.centroids.shape[0]):
+            sel = np.where(assign == c)[0]
+            chars = int(sum(len(texts[j]) for j in sel))
+            cl = EdgeCluster(ids=chunk_ids[sel], char_count=chars,
+                             gen_latency_est=self.cost.embed_latency(chars))
+            # ---- Algorithm 1: Selective Index Storage ----
+            if self.store_heavy and cl.gen_latency_est > self.slo_s:
+                self.storage.put(len(self.clusters),
+                                 embeddings[sel])          # persist heavy tail
+                cl.stored = True
+            self.clusters.append(cl)
+        # second-level embeddings are now PRUNED (not retained in memory)
+        return assign
+
+    # ------------------------------------------------------------------
+    # memory accounting
+    # ------------------------------------------------------------------
+    def memory_bytes(self) -> int:
+        n = self.centroids.nbytes if self.centroids is not None else 0
+        return n + self.cache.total_bytes()
+
+    def storage_bytes(self) -> int:
+        return self.storage.total_bytes()
+
+    @property
+    def nlist(self) -> int:
+        return 0 if self.centroids is None else len(self.centroids)
+
+    @property
+    def ntotal(self) -> int:
+        return sum(c.size for c in self.clusters if c.active)
+
+    # ------------------------------------------------------------------
+    # retrieval (Fig. 9)
+    # ------------------------------------------------------------------
+    def _resolve_cluster(self, cid: int, lat: LatencyBreakdown
+                         ) -> Tuple[np.ndarray, bool]:
+        """Returns (embeddings, cache_missed)."""
+        cl = self.clusters[cid]
+        # Step 2-3: precomputed? load from storage
+        if cl.stored and cid in self.storage:
+            embs = self.storage.get(cid)
+            lat.l2_storage_load_s += self.cost.storage_load_latency(embs.nbytes)
+            lat.n_storage_loads += 1
+            return embs, False
+        # Step 4: embedding cache
+        cached = self.cache.access(cid)
+        if cached is not None:
+            lat.l2_cache_hit_s += self.cost.mem_load_latency(
+                cached.nbytes, resident_bytes=self.memory_bytes())
+            lat.n_cache_hits += 1
+            return cached, False
+        # Step 4b: regenerate in flight
+        texts = self.get_chunks(cl.ids.tolist())
+        chars = sum(len(t) for t in texts)
+        embs = np.ascontiguousarray(self.embed_fn(texts), np.float32)
+        gen_s = self.cost.embed_latency(chars)
+        lat.l2_generate_s += gen_s
+        lat.n_generated += 1
+        lat.chars_embedded += chars
+        cl.gen_latency_est = gen_s
+        self.cache.insert(cid, embs, gen_s,
+                          min_latency_threshold=self.threshold.threshold)
+        return embs, True
+
+    def search(self, query_emb: np.ndarray, k: int, nprobe: int,
+               query_chars: int = 0
+               ) -> Tuple[np.ndarray, np.ndarray, LatencyBreakdown]:
+        query = np.atleast_2d(np.asarray(query_emb, np.float32))
+        assert query.shape[0] == 1
+        lat = LatencyBreakdown()
+        with WallTimer() as t:
+            if query_chars:
+                lat.embed_query_s = self.cost.embed_latency(query_chars)
+            # Step 1: first-level centroid search
+            _, probed = topk_ip(self.centroids, query,
+                                min(nprobe, self.nlist))
+            probed = [int(c) for c in np.asarray(probed)[0]
+                      if c >= 0 and self.clusters[int(c)].active
+                      and self.clusters[int(c)].size > 0]
+            lat.n_clusters_probed = len(probed)
+            lat.centroid_search_s = (
+                self.cost.mem_load_latency(self.centroids.nbytes)
+                + self.cost.search_latency(self.nlist, self.dim))
+            # Steps 2-5: resolve each probed cluster's embeddings
+            cand_embs, cand_ids, missed = [], [], False
+            for cid in probed:
+                embs, miss = self._resolve_cluster(cid, lat)
+                missed |= miss
+                cand_embs.append(embs)
+                cand_ids.append(self.clusters[cid].ids)
+            if not cand_embs:
+                return (np.full((1, k), -1, np.int64),
+                        np.full((1, k), -np.inf, np.float32), lat)
+            # Step 6: second-level fused top-k
+            embs = np.concatenate(cand_embs)
+            idmap = np.concatenate(cand_ids)
+            vals, idx = topk_ip(embs, query, k)
+            vals, idx = np.asarray(vals), np.asarray(idx)
+            lat.l2_search_s = self.cost.search_latency(len(embs), self.dim)
+        lat.wall_s = t.elapsed
+        # ---- Algorithm 3: adapt the admission threshold ----
+        new_thr = self.threshold.observe(missed, lat.retrieval_s)
+        if missed:
+            self.cache.drop_below_threshold(new_thr)
+        ids = np.where(idx >= 0, idmap[np.clip(idx, 0, len(idmap) - 1)], -1)
+        return ids, vals, lat
+
+    # ------------------------------------------------------------------
+    # online updates (§5.4)
+    # ------------------------------------------------------------------
+    def insert(self, chunk_id: int, text: str,
+               embedding: Optional[np.ndarray] = None):
+        if embedding is None:
+            embedding = self.embed_fn([text])[0]
+        embedding = np.asarray(embedding, np.float32)
+        q = embedding[None] / max(np.linalg.norm(embedding), 1e-9)
+        _, idx = topk_ip(self.centroids, q, 1)
+        cid = int(np.asarray(idx)[0, 0])
+        cl = self.clusters[cid]
+        cl.ids = np.append(cl.ids, np.int64(chunk_id))
+        cl.char_count += len(text)
+        self._chunk_chars[int(chunk_id)] = len(text)
+        cl.gen_latency_est = self.cost.embed_latency(cl.char_count)
+        self.cache.invalidate(cid)                      # stale embeddings
+        if self.store_heavy and cl.gen_latency_est > self.slo_s:
+            self._restore_cluster(cid)                  # regenerate + persist
+        if cl.char_count > self.split_max_chars:
+            self._split_cluster(cid)
+        return cid
+
+    def remove(self, chunk_id: int) -> Optional[int]:
+        for cid, cl in enumerate(self.clusters):
+            if not cl.active:
+                continue
+            pos = np.where(cl.ids == chunk_id)[0]
+            if len(pos) == 0:
+                continue
+            cl.ids = np.delete(cl.ids, pos)
+            cl.char_count -= self._chunk_chars.pop(int(chunk_id), 0)
+            cl.gen_latency_est = self.cost.embed_latency(cl.char_count)
+            self.cache.invalidate(cid)
+            if cl.stored:
+                if cl.gen_latency_est <= self.slo_s:
+                    # cheap again: drop the stored copy entirely (async in
+                    # the paper; synchronous here)
+                    self.storage.delete(cid)
+                    cl.stored = False
+                else:
+                    self._restore_cluster(cid)
+            if 0 < cl.size < self.merge_min_size:
+                self._merge_cluster(cid)
+            return cid
+        return None
+
+    # ---- maintenance helpers ----
+    def _regen_embeddings(self, cid: int) -> np.ndarray:
+        cl = self.clusters[cid]
+        texts = self.get_chunks(cl.ids.tolist())
+        return np.ascontiguousarray(self.embed_fn(texts), np.float32)
+
+    def _restore_cluster(self, cid: int):
+        embs = self._regen_embeddings(cid)
+        self.storage.put(cid, embs)
+        self.clusters[cid].stored = True
+
+    def _split_cluster(self, cid: int):
+        """Split an oversized cluster into two (k-means k=2 on regenerated
+        embeddings); the new cluster is appended to the first level."""
+        cl = self.clusters[cid]
+        embs = self._regen_embeddings(cid)
+        if len(embs) < 2:
+            return
+        cents, assign = kmeans(embs, 2, iters=10, seed=len(self.clusters))
+        texts = self.get_chunks(cl.ids.tolist())
+        parts = []
+        for half in (0, 1):
+            sel = np.where(assign == half)[0]
+            chars = int(sum(len(texts[j]) for j in sel))
+            parts.append((cl.ids[sel], chars, embs[sel]))
+        if any(len(p[0]) == 0 for p in parts):
+            return
+        # replace cid with part 0; append part 1
+        self.storage.delete(cid)
+        self.cache.invalidate(cid)
+        for slot, (ids, chars, sub) in zip(
+                (cid, len(self.clusters)), parts):
+            newcl = EdgeCluster(ids=ids, char_count=chars,
+                                gen_latency_est=self.cost.embed_latency(chars))
+            if self.store_heavy and newcl.gen_latency_est > self.slo_s:
+                self.storage.put(slot, sub)
+                newcl.stored = True
+            if slot == cid:
+                self.clusters[cid] = newcl
+                self.centroids[cid] = cents[0]
+            else:
+                self.clusters.append(newcl)
+                self.centroids = np.concatenate(
+                    [self.centroids, cents[1:2]])
+
+    def _merge_cluster(self, cid: int):
+        """Merge an undersized cluster into its nearest active neighbor."""
+        cl = self.clusters[cid]
+        if self.nlist < 2 or cl.size == 0:
+            return
+        mask = np.ones(self.nlist, bool)
+        mask[cid] = False
+        for j, other in enumerate(self.clusters):
+            if not other.active:
+                mask[j] = False
+        if not mask.any():
+            return
+        sims = self.centroids @ self.centroids[cid]
+        sims[~mask] = -np.inf
+        tgt = int(np.argmax(sims))
+        other = self.clusters[tgt]
+        other.ids = np.concatenate([other.ids, cl.ids])
+        other.char_count += cl.char_count
+        other.gen_latency_est = self.cost.embed_latency(other.char_count)
+        self.cache.invalidate(tgt)
+        self.cache.invalidate(cid)
+        self.storage.delete(cid)
+        if other.stored or (self.store_heavy
+                            and other.gen_latency_est > self.slo_s):
+            self._restore_cluster(tgt)
+        cl.active = False
+        cl.ids = np.zeros((0,), np.int64)
+        cl.char_count = 0
+        self.centroids[cid] = -np.ones(self.dim) / np.sqrt(self.dim)  # bury
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        active = [c for c in self.clusters if c.active]
+        return {
+            "nlist": self.nlist,
+            "active_clusters": len(active),
+            "ntotal": self.ntotal,
+            "stored_clusters": sum(c.stored for c in active),
+            "memory_bytes": self.memory_bytes(),
+            "storage_bytes": self.storage_bytes(),
+            "cache_entries": len(self.cache),
+            "cache_hit_rate": self.cache.hit_rate,
+            "threshold_s": self.threshold.threshold,
+        }

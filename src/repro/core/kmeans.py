@@ -1,0 +1,80 @@
+"""K-means clustering for the IVF first level.
+
+The paper builds its first-level index with FAISS k-means, 20 iterations
+(§6.2).  This is our JAX replacement: k-means++ seeding + jit'd Lloyd
+iterations.  Works on unit-normalized embeddings (spherical k-means is the
+cosine-similarity analogue; we re-normalize centroids each iteration).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def pairwise_neg_ip(x, c, block: int = 0):
+    """Negative inner product 'distance' (unit vectors): lower = closer."""
+    return -(x @ c.T)
+
+
+@jax.jit
+def _assign(x, centroids):
+    d = pairwise_neg_ip(x, centroids)
+    return jnp.argmin(d, axis=1), -jnp.min(d, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _update(x, assign, k: int):
+    one_hot = jax.nn.one_hot(assign, k, dtype=x.dtype)          # (n, k)
+    sums = one_hot.T @ x                                        # (k, d)
+    counts = one_hot.sum(0)[:, None]
+    cent = sums / jnp.maximum(counts, 1.0)
+    norm = jnp.linalg.norm(cent, axis=1, keepdims=True)
+    cent = cent / jnp.maximum(norm, 1e-9)
+    return cent, counts[:, 0]
+
+
+def kmeans_pp_init(x: np.ndarray, k: int, rng: np.random.Generator):
+    """k-means++ seeding (host-side; O(n·k) total)."""
+    n = x.shape[0]
+    first = int(rng.integers(n))
+    centroids = [x[first]]
+    d2 = 2.0 - 2.0 * (x @ x[first])                             # unit vectors
+    for _ in range(1, k):
+        d2c = np.clip(d2, 1e-12, None)
+        probs = d2c / d2c.sum()
+        idx = int(rng.choice(n, p=probs))
+        centroids.append(x[idx])
+        d_new = 2.0 - 2.0 * (x @ x[idx])
+        d2 = np.minimum(d2, d_new)
+    return np.stack(centroids)
+
+
+def kmeans(x: np.ndarray, k: int, iters: int = 20,
+           seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (centroids (k, d) unit-norm, assignments (n,))."""
+    x = np.asarray(x, np.float32)
+    norms = np.linalg.norm(x, axis=1, keepdims=True)
+    xn = x / np.clip(norms, 1e-9, None)
+    rng = np.random.default_rng(seed)
+    k = min(k, x.shape[0])
+    cent = kmeans_pp_init(xn, k, rng)
+    xj = jnp.asarray(xn)
+    cj = jnp.asarray(cent)
+    for _ in range(iters):
+        assign, _ = _assign(xj, cj)
+        cj, counts = _update(xj, assign, k)
+        # re-seed empty clusters to the farthest points (host-side, rare)
+        empties = np.where(np.asarray(counts) == 0)[0]
+        if len(empties):
+            d = np.asarray(pairwise_neg_ip(xj, cj)).min(axis=1)
+            far = np.argsort(-d)[:len(empties)]  # least-similar points
+            c_host = np.asarray(cj)
+            c_host[empties] = xn[far]
+            cj = jnp.asarray(c_host)
+    assign, _ = _assign(xj, cj)
+    return np.array(cj), np.array(assign)  # writable host copies

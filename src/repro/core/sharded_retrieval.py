@@ -1,0 +1,90 @@
+"""Beyond-paper: pod-sharded second-level retrieval (DESIGN.md §2.1).
+
+The paper's premise is one memory-starved device.  On a pod, EdgeRAG's
+pruning is still what makes an index fit per-chip HBM next to the model —
+and the second-level search itself parallelizes: candidate embeddings shard
+round-robin over the "data" axis, every shard runs the fused top-k scan
+over its local rows (the same ivf_topk hot loop the Pallas kernel
+implements), and ONE all-gather of per-shard (k) candidates — k·shards
+rows, not the corpus — merges globally.
+
+Communication per query: shards × k × (4+4) bytes ≈ 16·10·8 = 1.3 kB.
+A replicated scan would move nothing but duplicate ALL compute; gathering
+raw candidates would move the whole probed set.  This is the standard
+distributed-top-k trade.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def sharded_topk_ip(embs, queries, k: int, mesh, axis: str = "data"
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """embs (N, D) row-sharded over ``axis``; queries (Q, D) replicated.
+
+    Returns (scores (Q, k), global row idx (Q, k)) — identical to
+    kernels.ivf_topk.ops.topk_ip on the gathered matrix.
+    """
+    n, d = embs.shape
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    pad = (-n) % n_shards
+    if pad:
+        embs = jnp.pad(embs, ((0, pad), (0, 0)))
+    n_padded = embs.shape[0]
+
+    def local_fn(emb_loc, q):
+        shard = jax.lax.axis_index(axis)
+        s_rows = emb_loc.shape[0]
+        scores = q.astype(jnp.float32) @ emb_loc.astype(jnp.float32).T
+        base = shard * s_rows + jnp.arange(s_rows)
+        scores = jnp.where((base < n)[None, :], scores, NEG_INF)
+        kk = min(k, s_rows)
+        vals, idx = jax.lax.top_k(scores, kk)              # (Q, kk) local
+        gidx = base[idx]
+        # gather the per-shard candidates everywhere, merge locally
+        all_vals = jax.lax.all_gather(vals, axis, axis=1)  # (Q, S, kk)
+        all_idx = jax.lax.all_gather(gidx, axis, axis=1)
+        qn = all_vals.shape[0]
+        flat_v = all_vals.reshape(qn, -1)
+        flat_i = all_idx.reshape(qn, -1)
+        mv, mi = jax.lax.top_k(flat_v, k)
+        return mv, jnp.take_along_axis(flat_i, mi, axis=1).astype(jnp.int32)
+
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(axis, None), P(None, None)),
+        out_specs=(P(), P()),
+        check_vma=False)
+    with mesh:
+        return fn(embs, queries)
+
+
+class ShardedFlatSearch:
+    """Pod-scale exhaustive search service over a pruned-or-not corpus slab.
+
+    Used by the pod serving story (examples) and as the reference
+    implementation the Pallas ivf_topk kernel would back on real hardware.
+    """
+
+    def __init__(self, embeddings: np.ndarray, mesh, axis: str = "data"):
+        self.mesh = mesh
+        self.axis = axis
+        self.n = embeddings.shape[0]
+        n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+        pad = (-self.n) % n_shards
+        emb = np.pad(embeddings.astype(np.float32), ((0, pad), (0, 0)))
+        sharding = NamedSharding(mesh, P(axis, None))
+        self.embs = jax.device_put(jnp.asarray(emb), sharding)
+
+    def search(self, queries: np.ndarray, k: int):
+        q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+        vals, idx = sharded_topk_ip(self.embs, q, k, self.mesh, self.axis)
+        return np.asarray(vals), np.asarray(idx)

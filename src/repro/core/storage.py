@@ -1,0 +1,66 @@
+"""Second-level embedding storage backend.
+
+Models the paper's split between DRAM (first-level centroids, cache) and
+SD-card storage (precomputed heavy-cluster embeddings).  The "disk" flavor
+actually writes .npy files so persistence is real; the "memory" flavor keeps
+arrays in a dict (fast unit tests).  Either way the *edge* latency of a load
+comes from the cost model, not this machine's SSD.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class StorageBackend:
+    """Keyed blob store for per-cluster embedding matrices."""
+
+    def __init__(self, mode: str = "memory", root: Optional[str] = None):
+        assert mode in ("memory", "disk")
+        self.mode = mode
+        self._mem: Dict[int, np.ndarray] = {}
+        if mode == "disk":
+            self.root = root or tempfile.mkdtemp(prefix="edgerag_store_")
+            os.makedirs(self.root, exist_ok=True)
+
+    def _path(self, key: int) -> str:
+        return os.path.join(self.root, f"cluster_{key}.npy")
+
+    def put(self, key: int, embeddings: np.ndarray) -> int:
+        """Returns stored byte size."""
+        emb = np.ascontiguousarray(embeddings, np.float32)
+        if self.mode == "memory":
+            self._mem[key] = emb
+        else:
+            np.save(self._path(key), emb)
+        return emb.nbytes
+
+    def get(self, key: int) -> np.ndarray:
+        if self.mode == "memory":
+            return self._mem[key]
+        return np.load(self._path(key))
+
+    def delete(self, key: int):
+        if self.mode == "memory":
+            self._mem.pop(key, None)
+        elif os.path.exists(self._path(key)):
+            os.remove(self._path(key))
+
+    def __contains__(self, key: int) -> bool:
+        if self.mode == "memory":
+            return key in self._mem
+        return os.path.exists(self._path(key))
+
+    def keys(self):
+        if self.mode == "memory":
+            return list(self._mem)
+        return [int(f.split("_")[1].split(".")[0])
+                for f in os.listdir(self.root) if f.endswith(".npy")]
+
+    def total_bytes(self) -> int:
+        if self.mode == "memory":
+            return sum(a.nbytes for a in self._mem.values())
+        return sum(os.path.getsize(self._path(k)) for k in self.keys())

@@ -1,0 +1,5 @@
+from repro.data.chunking import chunk_text  # noqa
+from repro.data.tokenizer import HashingTokenizer  # noqa
+from repro.data.embedder import HashingEmbedder, ModelEmbedder  # noqa
+from repro.data.synthetic import (BEIR_SPECS, SyntheticDataset,  # noqa
+                                  generate_dataset)

@@ -1,0 +1,111 @@
+"""Embedding models behind one protocol: ``embed(texts) -> (n, dim) f32``
+(unit-normalized), plus ``dim``.
+
+* :class:`HashingEmbedder` — deterministic char-3-gram random projection.
+  Fast and similarity-preserving enough for index unit tests.
+* :class:`ModelEmbedder` — the real thing: wraps the gte-base JAX model
+  (``repro.models.encode``) behind the tokenizer.  Used by the e2e examples.
+* :class:`TableEmbedder` — oracle for synthetic corpora: chunk texts carry a
+  ``doc-<id>`` prefix that resolves to a precomputed vector, so regeneration
+  at retrieval time reproduces indexing-time embeddings exactly (the paper's
+  determinism assumption for online generation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.data.tokenizer import HashingTokenizer, _fnv1a
+
+
+class HashingEmbedder:
+    def __init__(self, dim: int = 768, seed: int = 0, n_features: int = 4096):
+        self.dim = dim
+        rng = np.random.default_rng(seed)
+        self._proj = rng.standard_normal((n_features, dim)).astype(np.float32)
+        self._proj /= np.sqrt(n_features)
+        self.n_features = n_features
+        self.calls = 0
+        self.chars_embedded = 0
+
+    def _features(self, text: str) -> np.ndarray:
+        f = np.zeros(self.n_features, np.float32)
+        t = text.lower()
+        for i in range(len(t) - 2):
+            f[_fnv1a(t[i:i + 3]) % self.n_features] += 1.0
+        return f
+
+    def embed(self, texts: Sequence[str]) -> np.ndarray:
+        self.calls += 1
+        self.chars_embedded += sum(len(t) for t in texts)
+        feats = np.stack([self._features(t) for t in texts])
+        out = feats @ self._proj
+        norms = np.linalg.norm(out, axis=1, keepdims=True)
+        return out / np.clip(norms, 1e-9, None)
+
+    __call__ = embed
+
+
+class TableEmbedder:
+    """Oracle lookup for synthetic corpora (texts carry 'doc-<id> ...')."""
+
+    def __init__(self, table: Dict[int, np.ndarray], dim: int):
+        self.table = table
+        self.dim = dim
+        self.calls = 0
+        self.chars_embedded = 0
+        self._fallback = HashingEmbedder(dim=dim, seed=1)
+
+    def embed(self, texts: Sequence[str]) -> np.ndarray:
+        self.calls += 1
+        self.chars_embedded += sum(len(t) for t in texts)
+        out = np.empty((len(texts), self.dim), np.float32)
+        for i, t in enumerate(texts):
+            if t.startswith("doc-"):
+                did = int(t[4:t.index(" ")] if " " in t else t[4:])
+                out[i] = self.table[did]
+            else:
+                out[i] = self._fallback.embed([t])[0]
+        return out
+
+    __call__ = embed
+
+
+class ModelEmbedder:
+    """gte-base-en-v1.5 (paper Table 3) running in this framework."""
+
+    def __init__(self, cfg=None, params=None, *, max_len: int = 128,
+                 seed: int = 0, reduced: bool = True):
+        import jax
+        from repro.configs import get_config
+        from repro.models import encode, init_params
+        self._encode = encode
+        if cfg is None:
+            cfg = get_config("gte-base-en-v1.5")
+            if reduced:
+                cfg = cfg.reduced(num_layers=2, d_model=256)
+        self.cfg = cfg
+        self.dim = cfg.d_model
+        if params is None:
+            params = init_params(cfg, jax.random.PRNGKey(seed))
+        self.params = params
+        self.tokenizer = HashingTokenizer(vocab_size=cfg.vocab_size)
+        self.max_len = max_len
+        self.calls = 0
+        self.chars_embedded = 0
+
+    @functools.cached_property
+    def _jit_encode(self):
+        import jax
+        return jax.jit(lambda p, toks, mask: self._encode(
+            p, self.cfg, {"tokens": toks, "attn_mask": mask}))
+
+    def embed(self, texts: Sequence[str]) -> np.ndarray:
+        self.calls += 1
+        self.chars_embedded += sum(len(t) for t in texts)
+        toks, mask = self.tokenizer.encode_batch(list(texts), self.max_len)
+        return np.asarray(self._jit_encode(self.params, toks, mask))
+
+    __call__ = embed

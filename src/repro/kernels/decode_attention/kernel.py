@@ -1,0 +1,159 @@
+"""Pallas TPU decode-attention: one query token vs. a long KV cache.
+
+This is the memory-bound serve_step hot loop (decode_32k / long_500k): the
+whole cache streams HBM→VMEM once per step, so the kernel's job is to keep
+that stream saturated while the VPU does the (1, BK) score row and the
+online softmax.  The cache layout (B, S, KH, D) is kept sequence-major —
+the natural decode layout, contiguous along the streamed axis.
+
+Grid: (B, H, Skv/BK), KV minor/sequential; per-(b,h) scratch: running max
+(1,), denominator (1,), accumulator (1, D).  cache_len rides in SMEM for
+validity masking (also covers ring buffers: pass cache_len >= Smax).
+
+GQA note: all H/KH query heads of a group re-stream the same KV block; the
+§Perf pass may instead tile heads into the block (one stream per KV head) —
+recorded as a hillclimb candidate, baseline keeps the simple layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, bk: int, window: int, scale: float, ks_ref=None, vs_ref=None):
+    _kernel_body(len_ref, q_ref, k_ref, v_ref, None, None, o_ref,
+                 m_scr, l_scr, acc_scr, bk=bk, window=window, scale=scale)
+
+
+def _kernel_q8(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+               m_scr, l_scr, acc_scr, *, bk: int, window: int, scale: float):
+    _kernel_body(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                 m_scr, l_scr, acc_scr, bk=bk, window=window, scale=scale)
+
+
+def _kernel_body(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                 m_scr, l_scr, acc_scr, *, bk: int, window: int,
+                 scale: float):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cache_len = len_ref[0]
+    k_pos = ik * bk + jax.lax.iota(jnp.int32, bk)
+    valid = k_pos < cache_len
+    if window:
+        valid = jnp.logical_and(valid, k_pos > cache_len - 1 - window)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (D,)
+        k = k_ref[0, :, 0].astype(jnp.float32)               # (BK, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        if ks_ref is not None:
+            # int8 cache: dequantize in VMEM right after the HBM stream —
+            # the HBM traffic (the decode bottleneck) is halved
+            k = k * ks_ref[0, :, 0]
+            v = v * vs_ref[0, :, 0]
+        s = k @ q                                            # (BK,)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.exp(s - m_new)                               # (BK,)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[0] = l_scr[0] * alpha + p.sum()
+        acc_scr[0] = acc_scr[0] * alpha + p @ v
+        m_scr[0] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_scr[0] / jnp.maximum(l_scr[0], 1e-20)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention_pallas(q, k_cache, v_cache, cache_len, *,
+                            window: int = 0, bk: int = 512,
+                            interpret: bool = True):
+    """q (B,H,D); k/v cache (B,Smax,KH,D); cache_len scalar -> (B,H,D)."""
+    b, h, d = q.shape
+    smax, kh = k_cache.shape[1], k_cache.shape[2]
+    group = h // kh
+    bk = min(bk, smax)
+    assert smax % bk == 0, "cache length must be a block multiple"
+    scale = d ** -0.5
+    lens = jnp.asarray(cache_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_kernel, bk=bk, window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, smax // bk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, d), lambda bi, hi, ik: (bi, hi, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda bi, hi, ik: (bi, ik, hi // group, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda bi, hi, ik: (bi, ik, hi // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bi, hi, ik: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, q, k_cache, v_cache)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention_pallas_q8(q, k_q, k_scale, v_q, v_scale, cache_len, *,
+                               window: int = 0, bk: int = 512,
+                               interpret: bool = True):
+    """Int8-cache variant: k_q/v_q (B,Smax,KH,D) int8 with per-(token,head)
+    scales (B,Smax,KH,1) f32; dequant happens post-VMEM-load in the kernel.
+    HBM cache traffic is halved vs bf16 — the §Roofline decode bottleneck."""
+    b, h, d = q.shape
+    smax, kh = k_q.shape[1], k_q.shape[2]
+    group = h // kh
+    bk = min(bk, smax)
+    assert smax % bk == 0
+    scale = d ** -0.5
+    lens = jnp.asarray(cache_len, jnp.int32).reshape(1)
+    kernel = functools.partial(_kernel_q8, bk=bk, window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, smax // bk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, d), lambda bi, hi, ik: (bi, hi, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda bi, hi, ik: (bi, ik, hi // group, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda bi, hi, ik: (bi, ik, hi // group, 0)),
+            pl.BlockSpec((1, bk, 1, 1),
+                         lambda bi, hi, ik: (bi, ik, hi // group, 0)),
+            pl.BlockSpec((1, bk, 1, 1),
+                         lambda bi, hi, ik: (bi, ik, hi // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bi, hi, ik: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, q, k_q, v_q, k_scale, v_scale)

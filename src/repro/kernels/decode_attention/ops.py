@@ -1,0 +1,20 @@
+"""Public op: single-token decode attention with dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     impl: str = "auto"):
+    """q (B,H,D); k/v cache (B,Smax,KH,D) -> (B,H,D)."""
+    if impl == "pallas" or (impl == "auto" and on_tpu()):
+        return decode_attention_pallas(q, k_cache, v_cache, cache_len,
+                                       window=window, interpret=not on_tpu())
+    return decode_attention_ref(q, k_cache, v_cache, cache_len, window=window)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for single-token decode attention.
+
+Contract: q (B, H, D) — one new token per sequence — against a KV cache
+(B, Smax, KH, D) of which the first ``cache_len`` entries are valid
+(ring-buffer caches pass cache_len >= Smax so everything is valid).
+Optional trailing window restricts to the last ``window`` valid positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    b, h, d = q.shape
+    kh = k_cache.shape[2]
+    rep = h // kh
+    k = jnp.repeat(k_cache, rep, axis=2).astype(jnp.float32)  # (B,S,H,D)
+    v = jnp.repeat(v_cache, rep, axis=2).astype(jnp.float32)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k) * d ** -0.5
+    idx = jnp.arange(k_cache.shape[1])
+    valid = idx < cache_len
+    if window:
+        valid &= idx > cache_len - 1 - window
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", probs, v).astype(q.dtype)

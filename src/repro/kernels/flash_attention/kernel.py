@@ -1,0 +1,118 @@
+"""Pallas TPU flash-attention (prefill): online-softmax over KV blocks.
+
+Grid: (B, H, Sq/BQ, Skv/BK) — KV is the minor sequential axis so the
+(BQ,)-shaped running max / denominator and the (BQ, D) accumulator live in
+VMEM scratch across KV blocks of one query tile.
+
+BlockSpec tiling (all VMEM):
+  q    (1, 1, BQ, D)   index (b, h, iq, 0)
+  k/v  (1, 1, BK, D)   index (b, h // (H/KH), ik, 0)   ← GQA head fold
+  out  (1, 1, BQ, D)   index (b, h, iq, 0)
+
+BQ = BK = 128 default: MXU-native 128-lane tiles; scratch footprint
+BQ*D*4 + 2*BQ*4 ≈ 66 KiB at D=128 — far under the ~16 MiB VMEM budget,
+leaving room for XLA to double-buffer the HBM→VMEM k/v streams.
+
+Causal masking is positional (global indices); fully-masked KV blocks are
+skipped with @pl.when so the causal prefill does ~half the block work —
+same trick as the reference TPU flash kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, bq: int, bk: int, causal: bool, window: int, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = iq * bq + jax.lax.iota(jnp.int32, bq)
+    k_pos = ik * bk + jax.lax.iota(jnp.int32, bk)
+    # block-level skip: causal ⇒ KV blocks fully in the future do nothing;
+    # sliding window ⇒ KV blocks fully behind the window do nothing
+    needed = ik >= 0  # traced True
+    if causal:
+        needed = jnp.logical_and(needed, (ik * bk) <= (iq * bq + bq - 1))
+    if window:
+        needed = jnp.logical_and(
+            needed, (ik * bk + bk - 1) > (iq * bq - window))
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = q @ k.T                                          # (BQ, BK) MXU
+        ok = jnp.ones((bq, bk), bool)
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if window:
+            ok &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        denom = jnp.maximum(l_scr[...], 1e-20)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = True):
+    """q (B,H,Sq,D); k,v (B,KH,Skv,D) -> (B,H,Sq,D)."""
+    b, h, sq, d = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    assert h % kh == 0
+    group = h // kh
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, "pad seq to block multiple"
+    grid = (b, h, sq // bq, skv // bk)
+    scale = d ** -0.5
+
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, causal=causal,
+                               window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, iq, ik: (bi, hi, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, iq, ik: (bi, hi // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, iq, ik: (bi, hi // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, iq, ik: (bi, hi, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,29 @@
+"""Public op: flash attention with layout adaptation + dispatch.
+
+Model code uses (B, S, H, D); the kernel is head-major (B, H, S, D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = "auto"):
+    """q (B,S,H,D); k,v (B,S,KH,D) -> (B,S,H,D)."""
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    if impl == "pallas" or (impl == "auto" and on_tpu()):
+        out = flash_attention_pallas(qh, kh, vh, causal=causal, window=window,
+                                     interpret=not on_tpu())
+    else:
+        out = flash_attention_ref(qh, kh, vh, causal=causal, window=window)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel (prefill hot loop).
+
+Layout contract (kernel-native, head-major):
+  q: (B, H, Sq, D); k, v: (B, KH, Skv, D), H % KH == 0.
+Returns (B, H, Sq, D).  Causal + optional sliding window, in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    b, h, sq, d = q.shape
+    kh = k.shape[1]
+    rep = h // kh
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    qp = jnp.arange(sq)
+    kp = jnp.arange(k.shape[2])
+    ok = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        ok &= kp[None, :] <= qp[:, None]
+    if window:
+        ok &= kp[None, :] > qp[:, None] - window
+    scores = jnp.where(ok[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: fused inner-product distance + running top-k scan.
+
+The compute hot-spot EdgeRAG inherits from FAISS is the second-level search:
+score every candidate embedding in the probed clusters against the query and
+keep the best k.  FAISS does a CPU linear scan; the TPU-native formulation
+streams candidate rows HBM→VMEM exactly once and fuses the MXU distance
+matmul with an on-chip running top-k, so no (N,) score vector ever hits HBM.
+
+Grid: (Q, N // BLOCK_N) — the N axis is the minor (sequential) grid dim, so
+the (k,) running-best VMEM scratch persists across blocks of one query.
+Top-k maintenance is k iterations of (argmax, mask) over the (BLOCK_N + k,)
+candidate vector — k is small (≤ 128), pure VPU work.
+
+BlockSpec tiling: emb block (BLOCK_N, D) f32 in VMEM (default 512×768×4 ≈
+1.5 MiB), query row (1, D), outputs (1, k).  D stays whole: dim 768 =
+6×128 lanes, MXU-aligned.  The true candidate count rides in SMEM so padded
+rows can be masked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _topk_merge(scores, base_idx, run_vals, run_idx, k: int):
+    """Merge a block's scores (B,) into the running (k,) best."""
+    cand_vals = jnp.concatenate([run_vals, scores])          # (k + B,)
+    cand_idx = jnp.concatenate([run_idx, base_idx])
+
+    def body(i, carry):
+        vals, out_v, out_i = carry
+        j = jnp.argmax(vals)
+        out_v = out_v.at[i].set(vals[j])
+        out_i = out_i.at[i].set(cand_idx[j])
+        vals = vals.at[j].set(NEG_INF)
+        return vals, out_v, out_i
+
+    init = (cand_vals,
+            jnp.full((k,), NEG_INF, jnp.float32),
+            jnp.full((k,), jnp.int32(2**30), jnp.int32))
+    _, out_v, out_i = jax.lax.fori_loop(0, k, body, init)
+    return out_v, out_i
+
+
+def _kernel(valid_ref, emb_ref, q_ref, out_v_ref, out_i_ref,
+            run_v, run_i, *, k: int, block_n: int):
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        run_v[...] = jnp.full((k,), NEG_INF, jnp.float32)
+        run_i[...] = jnp.full((k,), jnp.int32(2**30), jnp.int32)
+
+    emb = emb_ref[...].astype(jnp.float32)                   # (B, D)
+    q = q_ref[...].astype(jnp.float32)                       # (1, D)
+    scores = (emb @ q.T)[:, 0]                               # (B,) via MXU
+    base = nb * block_n + jax.lax.iota(jnp.int32, block_n)
+    scores = jnp.where(base < valid_ref[0], scores, NEG_INF)
+    v, i = _topk_merge(scores, base, run_v[...], run_i[...], k)
+    run_v[...] = v
+    run_i[...] = i
+
+    @pl.when(nb == pl.num_programs(1) - 1)
+    def _done():
+        out_v_ref[...] = run_v[...][None]
+        out_i_ref[...] = run_i[...][None]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def topk_ip_pallas(embs, queries, k: int, *, block_n: int = 512,
+                   interpret: bool = True):
+    """embs (N, D) f32, queries (Q, D) f32 -> (scores (Q,k), idx (Q,k))."""
+    n, d = embs.shape
+    q = queries.shape[0]
+    n_pad = (-n) % block_n
+    if n_pad:
+        embs = jnp.pad(embs, ((0, n_pad), (0, 0)))
+    n_blocks = embs.shape[0] // block_n
+    valid = jnp.array([n], jnp.int32)
+
+    kernel = functools.partial(_kernel, k=k, block_n=block_n)
+    out_v, out_i = pl.pallas_call(
+        kernel,
+        grid=(q, n_blocks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_n, d), lambda qi, ni: (ni, 0)),
+            pl.BlockSpec((1, d), lambda qi, ni: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((1, k), lambda qi, ni: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k,), jnp.float32),
+            pltpu.VMEM((k,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(valid, embs, queries)
+    return out_v, out_i

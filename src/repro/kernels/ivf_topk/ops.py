@@ -1,0 +1,45 @@
+"""Public op: top-k inner-product search over candidate embeddings.
+
+Dispatch policy:
+  * on TPU: the Pallas fused kernel (compiled);
+  * elsewhere (this CPU container): either the Pallas kernel in interpret
+    mode (tests exercise this) or the pure-jnp oracle (fast path used by the
+    EdgeRAG runtime — interpret-mode Python loops are slow at real sizes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ivf_topk.kernel import topk_ip_pallas
+from repro.kernels.ivf_topk.ref import topk_ip_ref
+
+_jit_ref = jax.jit(topk_ip_ref, static_argnames=("k",))
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def topk_ip(embs, queries, k: int, *, impl: str = "auto"):
+    """embs (N, D), queries (Q, D) -> (scores (Q, k), idx (Q, k)).
+
+    impl: "auto" | "ref" | "pallas".
+    """
+    n = embs.shape[0]
+    k_eff = min(k, n)
+    if impl == "pallas" or (impl == "auto" and on_tpu()):
+        vals, idx = topk_ip_pallas(jnp.asarray(embs, jnp.float32),
+                                   jnp.asarray(queries, jnp.float32),
+                                   k_eff, interpret=not on_tpu())
+    else:
+        vals, idx = _jit_ref(jnp.asarray(embs, jnp.float32),
+                             jnp.asarray(queries, jnp.float32), k=k_eff)
+    if k_eff < k:
+        pad = k - k_eff
+        vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-np.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, pad)), constant_values=-1)
+    return vals, idx

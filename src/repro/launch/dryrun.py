@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^^ MUST precede every other import: jax locks the device count on first
+# init.  512 host devices back both the 256-chip single-pod mesh and the
+# 2x256 multi-pod mesh.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) combination this lowers and
+compiles the real step function — ``train_step`` for train_4k,
+``prefill`` for prefill_32k, ``serve_step`` (one token vs. a seq_len cache)
+for decode shapes — against ShapeDtypeStruct inputs (no allocation), then
+records:
+
+  * memory_analysis()            — proves the layout fits per device
+  * cost_analysis()              — per-chip FLOPs / bytes for §Roofline
+  * collective bytes (HLO parse) — the third roofline term
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--archs a,b,c]
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.roofline import model_flops_estimate, roofline
+from repro.configs.shapes import INPUT_SHAPES
+from repro.launch import input_specs as specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch import sharding as shd
+from repro.models.model import decode_step, prefill
+from repro.train.train_step import TrainState, make_train_step
+from repro.train.optimizer import AdamWState
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../experiments/dryrun")
+
+
+def _is_long_context_dense_skip(cfg, shape) -> bool:
+    # DESIGN.md §4: no skips — attention archs serve long_500k through the
+    # sliding-window mode.  Kept as a hook for pure full-attention runs.
+    return False
+
+
+def build_case(arch: str, shape_name: str, mesh, *, compute_dtype=jnp.bfloat16,
+               param_dtype=None, overrides: Dict[str, Any] | None = None):
+    """Returns (jitted_fn, kwargs_specs dict)."""
+    cfg = configs.get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    overrides = overrides or {}
+    dist = None
+    if (overrides.get("moe_impl") or overrides.get("decode_attn_impl")
+            or overrides.get("seq_parallel")):
+        from repro.launch.mesh import data_axes
+        from repro.models.distributed import DistConfig
+        dist = DistConfig(
+            mesh=mesh, data_axes=data_axes(mesh),
+            moe_impl=overrides.get("moe_impl", "gspmd"),
+            decode_attn_impl=overrides.get("decode_attn_impl", "gspmd"),
+            seq_parallel=bool(overrides.get("seq_parallel", False)))
+
+    if shape.kind == "train":
+        param_dtype = param_dtype or jnp.float32
+        params_s = specs.param_specs(cfg, param_dtype)
+        state_s = TrainState(
+            params=params_s,
+            opt=AdamWState(mu=params_s, nu=params_s,
+                           count=jax.ShapeDtypeStruct((), jnp.int32)),
+            step=jax.ShapeDtypeStruct((), jnp.int32))
+        batch_s = specs.input_specs(cfg, shape, compute_dtype)["batch"]
+        unroll = bool(overrides.get("unroll_layers", False))
+        fsdp_gather = bool(overrides.get("fsdp_gather", False))
+        gathered_sh = (shd.param_shardings(params_s, mesh, mode="serve")
+                       if fsdp_gather else None)
+        if unroll or fsdp_gather:
+            from repro.models.model import forward as _fwd
+            from repro.train.optimizer import adamw_update, cosine_schedule
+
+            def _loss(p, batch):
+                if fsdp_gather:
+                    # FSDP proper: gather weights over the data axis ONCE per
+                    # step instead of letting GSPMD all-reduce activations
+                    p = jax.lax.with_sharding_constraint(p, gathered_sh)
+                logits, _, aux = _fwd(p, cfg, batch, mode="train",
+                                      compute_dtype=compute_dtype,
+                                      unroll_layers=unroll, dist=dist)
+                labels = batch["labels"]
+                logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+                ll = jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+                return ll.mean() * -1.0 + cfg.router_aux_loss_coef * aux
+
+            def step(state, batch):
+                loss, grads = jax.value_and_grad(_loss)(state.params, batch)
+                lr = cosine_schedule(state.step)
+                new_p, new_opt, gn = adamw_update(grads, state.opt,
+                                                  state.params, lr=lr)
+                return TrainState(new_p, new_opt, state.step + 1), {
+                    "loss": loss, "grad_norm": gn}
+        else:
+            step = make_train_step(cfg, compute_dtype=compute_dtype,
+                                   attn_impl=overrides.get("attn_impl", "auto"),
+                                   dist=dist)
+        fn = step
+        args = (state_s, batch_s)
+        in_sh = (TrainState(
+                    params=shd.param_shardings(params_s, mesh),
+                    opt=AdamWState(mu=shd.param_shardings(params_s, mesh),
+                                   nu=shd.param_shardings(params_s, mesh),
+                                   count=shd.replicated(mesh, state_s.step)),
+                    step=shd.replicated(mesh, state_s.step)),
+                 shd.batch_pspec(mesh, batch_s))
+    elif shape.kind == "prefill":
+        param_dtype = param_dtype or jnp.bfloat16
+        params_s = specs.param_specs(cfg, param_dtype)
+        sp = specs.input_specs(cfg, shape, compute_dtype)
+        fn = functools.partial(
+            prefill_step, cfg=cfg, compute_dtype=compute_dtype,
+            window_mode=shape.sliding_window_mode,
+            unroll_layers=bool(overrides.get("unroll_layers", False)),
+            dist=dist)
+        args = (params_s, sp["batch"], sp["caches"])
+        in_sh = (shd.param_shardings(params_s, mesh, mode="serve"),
+                 shd.batch_pspec(mesh, sp["batch"]),
+                 shd.cache_pspec(cfg, mesh, sp["caches"]))
+    else:  # decode
+        param_dtype = param_dtype or jnp.bfloat16
+        params_s = specs.param_specs(cfg, param_dtype)
+        sp = specs.input_specs(cfg, shape, compute_dtype)
+        fn = functools.partial(
+            serve_step, cfg=cfg, compute_dtype=compute_dtype,
+            window_mode=shape.sliding_window_mode,
+            unroll_layers=bool(overrides.get("unroll_layers", False)),
+            dist=dist)
+        args = (params_s, sp["tokens"], sp["caches"], sp["cache_len"])
+        in_sh = (shd.param_shardings(params_s, mesh, mode="serve"),
+                 shd.batch_pspec(mesh, sp["tokens"]),
+                 shd.cache_pspec(cfg, mesh, sp["caches"]),
+                 shd.replicated(mesh, sp["cache_len"]))
+    return cfg, shape, fn, args, in_sh
+
+
+def prefill_step(params, batch, caches, *, cfg, compute_dtype, window_mode,
+                 unroll_layers=False, dist=None):
+    from repro.models.model import forward
+    logits, new_caches, _ = forward(
+        params, cfg, batch, mode="prefill", caches=caches, cache_len=0,
+        window_mode=window_mode, compute_dtype=compute_dtype, remat=False,
+        unroll_layers=unroll_layers, dist=dist)
+    return logits[:, -1], new_caches
+
+
+def serve_step(params, tokens, caches, cache_len, *, cfg, compute_dtype,
+               window_mode, unroll_layers=False, dist=None):
+    """ONE new token against a seq_len KV cache; returns greedy next ids."""
+    from repro.models.model import forward
+    batch = ({"tokens": tokens} if tokens.ndim == 2
+             else {"embeds": tokens.astype(compute_dtype)})
+    logits, new_caches, _ = forward(
+        params, cfg, batch, mode="decode", caches=caches,
+        cache_len=cache_len, window_mode=window_mode,
+        compute_dtype=compute_dtype, remat=False,
+        unroll_layers=unroll_layers, dist=dist)
+    return jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32), new_caches
+
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
+             save: bool = True, overrides: Dict[str, Any] | None = None,
+             tag: str = "") -> Dict[str, Any]:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg, shape, fn, args, in_sh = build_case(arch, shape_name, mesh,
+                                             overrides=overrides)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_in_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_in_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception:
+        mem_d = {}
+    hlo = compiled.as_text()
+    chips = 512 if multi_pod else 256
+    coll_total, coll_by_op, coll_counts = collective_bytes(hlo)
+    flops = float(cost.get("flops", 0.0))
+    byt = float(cost.get("bytes accessed", 0.0))
+    rep = roofline(arch=arch, shape=shape_name, mesh_name=mesh_name,
+                   chips=chips, hlo_flops=flops, hlo_bytes=byt,
+                   collective_bytes=coll_total, collective_by_op=coll_by_op,
+                   model_flops=model_flops_estimate(cfg, shape))
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "ok": True, "tag": tag,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "memory_analysis": mem_d,
+        "collective_bytes_per_chip": coll_total,
+        "collective_by_op": coll_by_op,
+        "collective_counts": coll_counts,
+        "roofline": rep.row(),
+        "overrides": overrides or {},
+    }
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        path = os.path.join(RESULTS_DIR,
+                            f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--archs", type=str, default=None,
+                    help="comma-separated subset")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll the layer scan for exact cost accounting")
+    args = ap.parse_args()
+
+    if args.all or args.archs:
+        archs = (args.archs.split(",") if args.archs
+                 else list(configs.ASSIGNED_ARCHS))
+        shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    else:
+        archs = [args.arch or "stablelm-1.6b"]
+        shapes = [args.shape or "train_4k"]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            try:
+                out = run_case(arch, shape_name, multi_pod=args.multi_pod,
+                               save=not args.no_save,
+                               overrides=({"unroll_layers": True}
+                                          if args.unroll else None),
+                               tag="unroll" if args.unroll else "")
+                r = out["roofline"]
+                print(f"[OK]   {arch:24s} {shape_name:12s} {out['mesh']:8s} "
+                      f"compute={r['compute_ms']:9.3f}ms "
+                      f"memory={r['memory_ms']:9.3f}ms "
+                      f"coll={r['collective_ms']:9.3f}ms "
+                      f"dom={r['dominant']:10s} "
+                      f"compile={out['compile_s']:6.1f}s", flush=True)
+            except Exception as e:
+                failures.append((arch, shape_name, repr(e)))
+                print(f"[FAIL] {arch:24s} {shape_name:12s}: {e!r}",
+                      flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation.  What the dry-run lowers against.
+
+Modality carve-out (DESIGN.md §4): audio/vlm frontends are stubs, so
+``input_specs`` supplies frame/patch embeddings of the right shape directly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models.cache import init_cache
+
+SDS = jax.ShapeDtypeStruct
+
+
+def n_vision_patches(shape: InputShape) -> int:
+    return min(1024, shape.seq_len // 4)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape,
+                      compute_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.embedding_inputs:                      # audio: codec embeddings
+        batch["embeds"] = SDS((b, s, cfg.d_model), compute_dtype)
+    else:
+        batch["tokens"] = SDS((b, s), jnp.int32)
+    batch["labels"] = SDS((b, s), jnp.int32)
+    if cfg.use_mrope:
+        batch["positions"] = SDS((3, b, s), jnp.int32)
+    if cfg.arch_type == "vlm":
+        batch["vision_embeds"] = SDS((b, n_vision_patches(shape),
+                                      cfg.d_model), compute_dtype)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape,
+                        compute_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    batch = train_batch_specs(cfg, shape, compute_dtype)
+    batch.pop("labels")
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, cache_dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                           window_mode=shape.sliding_window_mode,
+                           dtype=cache_dtype))
+
+
+def decode_token_specs(cfg: ModelConfig, shape: InputShape,
+                       compute_dtype=jnp.bfloat16):
+    b = shape.global_batch
+    if cfg.embedding_inputs:
+        return SDS((b, 1, cfg.d_model), compute_dtype)
+    return SDS((b, 1), jnp.int32)
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.float32):
+    from repro.models.model import init_params
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype=dtype), jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                compute_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """The full kwargs pytree a step function is lowered against."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape, compute_dtype)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape, compute_dtype),
+                "caches": cache_specs(cfg, shape)}
+    return {"tokens": decode_token_specs(cfg, shape, compute_dtype),
+            "caches": cache_specs(cfg, shape),
+            "cache_len": SDS((), jnp.int32)}

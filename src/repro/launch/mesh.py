@@ -1,0 +1,37 @@
+"""Production mesh definitions (TPU v5e).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods = 512 chips as (pod=2, data=16, model=16); the "pod"
+axis is pure data parallelism across the DCN boundary.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; tests see 1 CPU).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Degenerate mesh for CPU tests/examples (1 device)."""
+    n = jax.device_count()
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-parallel axes of a mesh ('pod' folds into data)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+# TPU v5e hardware constants (per chip) — used by analysis/roofline.py
+V5E_PEAK_BF16_FLOPS = 197e12        # 197 TFLOP/s
+V5E_HBM_BW = 819e9                  # 819 GB/s
+V5E_ICI_BW = 50e9                   # ~50 GB/s per link
+V5E_HBM_BYTES = 16 * 1024**3

@@ -1,0 +1,207 @@
+"""Sharding rules: param / activation / cache PartitionSpecs per config.
+
+Baseline scheme (GSPMD-completed, §Perf hillclimbs override per-pair):
+
+* 2D weight sharding ("fsdp" flavor): the contraction dim of every matmul
+  weight shards over "data", the output-feature dim over "model".  GSPMD
+  materializes the FSDP all-gathers during compute; optimizer state shards
+  identically so per-chip state is params/256.
+* batch shards over ("pod","data"); model-parallel math over "model".
+* KV caches shard the SEQUENCE dim over "model" (uniformly legal — kv-head
+  counts of the assigned archs are mostly < 16) and batch over "data";
+  GSPMD turns decode softmax over the sharded seq dim into a partial-softmax
+  + all-reduce.  SSM states shard their head dim over "model".
+* MoE expert tables shard experts over "model" (GSPMD pads 40e over 16).
+
+Rules key off leaf PATH NAMES; leading stacked-layer axes are padded with
+None automatically (rank-aligned from the right).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import data_axes
+
+# trailing-dims spec per leaf name (rank-aligned from the right)
+_PARAM_RULES: Dict[str, Tuple] = {
+    "embed": ("model", "data"),          # (V, d)
+    "lm_head": ("data", "model"),        # (d, V)
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "gate": ("data", "model"),           # mlp + moe expert tables (see below)
+    "up": ("data", "model"),
+    "down": ("model", "data"),
+    "router": ("data", None),
+    "in_z": ("data", "model"),           # mamba (split projections)
+    "in_x": ("data", "model"),
+    "in_b": ("data", "model"),
+    "in_c": ("data", "model"),
+    "in_dt": ("data", "model"),
+    "out_proj": ("model", "data"),
+    "conv_x": (None, "model"),
+    "conv_b": (None, "model"),
+    "conv_c": (None, "model"),
+    "Wr": ("data", "model"),
+    "Wk": ("data", "model"),
+    "Wv": ("data", "model"),
+    "Wg": ("data", "model"),
+    "Wo": ("model", "data"),
+    "w1": ("data", None),
+    "w2": (None, "model"),
+    "Wck": ("data", "model"),
+    "Wcv": ("model", "data"),
+}
+# MoE expert tables are (E, d, ff): experts over model, d over data
+_MOE_EXPERT_RULES: Dict[str, Tuple] = {
+    "gate": ("model", "data", None),
+    "up": ("model", "data", None),
+    "down": ("model", None, "data"),
+}
+
+
+def _leaf_path_names(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+# fallback for MoE expert tables whose expert count doesn't divide the model
+# axis (granite's 40e over 16): shard the FFN dim over model instead
+_MOE_EXPERT_FALLBACK: Dict[str, Tuple] = {
+    "gate": (None, "data", "model"),
+    "up": (None, "data", "model"),
+    "down": (None, "model", "data"),
+}
+
+
+def _legalize(rule: Tuple, shape, mesh) -> Tuple:
+    """Drop axes that don't divide the corresponding dim (jit requires exact
+    divisibility for argument shardings)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape[-len(rule):], rule):
+        axes = (ax,) if isinstance(ax, str) else (ax or ())
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        out.append(ax if (n and dim % n == 0) else None)
+    return tuple(out)
+
+
+def param_pspec(path, leaf, mesh, mode: str = "train") -> P:
+    """mode="train": 2D fsdp×tensor sharding (optimizer state scales).
+    mode="serve": tensor-parallel only — weights replicate over "data" so
+    decode never all-gathers weights across the batch axis."""
+    names = _leaf_path_names(path)
+    name = names[-1]
+    in_moe = "moe" in names
+    rule = None
+    if in_moe and name in _MOE_EXPERT_RULES:
+        rule = _MOE_EXPERT_RULES[name]
+    elif name in _PARAM_RULES:
+        rule = _PARAM_RULES[name]
+    if rule is None:
+        return P()                       # norms, scalars, biases: replicate
+    rank = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    if rank < len(rule):
+        return P()
+    shape = leaf.shape
+    legal = _legalize(rule, shape, mesh)
+    if in_moe and name in _MOE_EXPERT_RULES and legal[0] is None:
+        # expert dim not divisible -> shard the FFN dim over model instead
+        legal = _legalize(_MOE_EXPERT_FALLBACK[name], shape, mesh)
+    if mode == "serve":
+        legal = tuple(None if r == "data" else r for r in legal)
+    pad = (None,) * (rank - len(legal))
+    return P(*(pad + tuple(legal)))
+
+
+def param_shardings(params, mesh, mode: str = "train"):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, mesh,
+                                                           mode)),
+        params)
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+def batch_pspec(mesh, batch_tree) -> Any:
+    dp = data_axes(mesh)
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_n = 1
+    for a in dp:
+        dp_n *= sizes[a]
+
+    def spec(path, leaf) -> P:
+        names = _leaf_path_names(path)
+        name = names[-1] if names else ""
+        rank = leaf.ndim
+        if name == "positions" and rank == 3:      # mrope (3, B, S)
+            b = leaf.shape[1]
+            return P(None, dp if b % dp_n == 0 else None, None)
+        if rank == 0:
+            return P()
+        # (B, ...) batch leading; replicate when B doesn't divide (batch=1)
+        if leaf.shape[0] % dp_n:
+            return P(*((None,) * rank))
+        return P(*((dp,) + (None,) * (rank - 1)))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec(path, leaf)), batch_tree)
+
+
+def cache_pspec(cfg: ModelConfig, mesh, cache_tree):
+    """Stacked caches: leaves are (R, B, ...).
+
+    KVCache.k/v: (R, B, S, KH, D) -> seq over model.
+    Mamba ssm (R, B, nh, hd, N) / rwkv wkv (R, B, H, dk, dv) -> heads over
+    model.  conv (R, B, W, C) -> C over model.  shifts (R, B, d) -> d over
+    model.
+    """
+    dp = data_axes(mesh)
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_n = 1
+    for a in dp:
+        dp_n *= sizes[a]
+    mp_n = sizes.get("model", 1)
+
+    def spec(path, leaf) -> P:
+        names = _leaf_path_names(path)
+        name = names[-1] if names else ""
+        rank = leaf.ndim
+        b = lambda: dp if (rank >= 2 and leaf.shape[1] % dp_n == 0) else None
+        m = lambda d: "model" if leaf.shape[d] % mp_n == 0 else None
+        if name in ("k", "v") and rank == 5:
+            return P(None, b(), m(2), None, None)     # seq over model
+        if name in ("ssm", "wkv") and rank == 5:
+            return P(None, b(), m(2), None, None)     # heads over model
+        if name == "conv" and rank == 4:
+            return P(None, b(), None, m(3))
+        if name in ("shift_t", "shift_c") and rank == 3:
+            return P(None, b(), m(2))
+        if rank >= 2:
+            return P(*((None, b()) + (None,) * (rank - 2)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec(path, leaf)), cache_tree)
+
+
+def replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,3 @@
+from repro.models.model import (decode_step, encode, forward, init_params,
+                                loss_fn, param_count, prefill)  # noqa
+from repro.models.cache import KVCache, init_cache, cache_bytes  # noqa

@@ -1,0 +1,157 @@
+"""GQA attention: reference, memory-efficient chunked (flash-style), decode.
+
+Three implementations with one contract:
+
+* ``attend_reference``  — materializes (B,H,S,S) scores.  Tests / tiny inputs.
+* ``attend_chunked``    — lax.scan over KV blocks with online softmax;
+                          O(S * block) memory, what prefill_32k lowers.
+* ``attend_decode``     — one query token against a KV cache (full or
+                          circular sliding-window).
+* the Pallas TPU kernels in ``repro.kernels.flash_attention`` /
+  ``decode_attention`` implement the same contract for the MXU; ops.py there
+  dispatches to these jnp versions as the interpret/CPU fallback oracle.
+
+All functions take q:(B,Sq,H,D), k/v:(B,Skv,KH,D) with H % KH == 0 and return
+(B,Sq,H,D).  Masks: ``causal`` plus optional ``window`` (sliding, in tokens).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k, num_q_heads):
+    """(B,S,KH,D) -> (B,S,H,D) by repeating each kv head."""
+    b, s, kh, d = k.shape
+    rep = num_q_heads // kh
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int):
+    """(Sq, Skv) additive bias from positions."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window and window > 0:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attend_reference(q, k, v, *, causal=True, window=0, logit_cap=0.0,
+                     q_offset=0):
+    """Quadratic reference.  q_offset: absolute position of q[0] vs k[0]."""
+    b, sq, h, d = q.shape
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scale = d ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = softcap(scores, logit_cap)
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(k.shape[1])
+    scores = scores + _mask_bias(q_pos, k_pos, causal, window)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attend_chunked(q, k, v, *, causal=True, window=0, logit_cap=0.0,
+                   block_kv=512, q_offset=0):
+    """Flash-style online-softmax over KV blocks.
+
+    Memory is O(Sq * block_kv) instead of O(Sq * Skv); this is the jnp
+    analogue of the Pallas kernel and is what the 32k-prefill dry-run lowers.
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    kh = k.shape[2]
+    rep = h // kh
+    if skv % block_kv:
+        pad = block_kv - skv % block_kv
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_valid = skv
+        skv = k.shape[1]
+    else:
+        kv_valid = skv
+    nblocks = skv // block_kv
+    scale = d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    q_pos = jnp.arange(sq) + q_offset
+
+    # reshape kv into blocks for scan
+    kb = k.reshape(b, nblocks, block_kv, kh, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblocks, block_kv, kh, d).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        blk_idx, kblk, vblk = inp
+        kblk = _expand_kv(kblk, h).astype(jnp.float32)
+        vblk = _expand_kv(vblk, h).astype(jnp.float32)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kblk)
+        scores = softcap(scores, logit_cap)
+        k_pos = blk_idx * block_kv + jnp.arange(block_kv)
+        bias = _mask_bias(q_pos, k_pos, causal, window)
+        bias = jnp.where(k_pos[None, :] < kv_valid, bias, NEG_INF)
+        scores = scores + bias[None, None]
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd",
+                                                      p, vblk)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (jnp.arange(nblocks), kb, vb))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attend_decode(q, k_cache, v_cache, cache_len, *, window=0, logit_cap=0.0,
+                  circular=False):
+    """One-token decode: q (B,1,H,D) vs cache (B,Smax,KH,D).
+
+    ``cache_len``: number of valid tokens already in the cache INCLUDING the
+    current token (caller inserts k/v of the current token before attending).
+    ``circular``: the cache is a ring buffer of size Smax = window; validity
+    is simply cache_len clamped to the window (positions are untracked —
+    RoPE was applied before insertion).
+    """
+    b, sq, h, d = q.shape
+    assert sq == 1
+    kh = k_cache.shape[2]
+    k = _expand_kv(k_cache, h).astype(jnp.float32)
+    v = _expand_kv(v_cache, h).astype(jnp.float32)
+    scale = d ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, k)
+    scores = softcap(scores, logit_cap)
+    smax = k_cache.shape[1]
+    idx = jnp.arange(smax)
+    clen = jnp.asarray(cache_len)
+    if clen.ndim == 0:
+        clen = clen[None]                      # broadcast over batch
+    clen = clen[:, None]                       # (B|1, 1)
+    if circular:
+        valid = idx[None, :] < jnp.minimum(clen, smax)
+    else:
+        valid = idx[None, :] < clen
+        if window and window > 0:
+            valid &= idx[None, :] > (clen - 1 - window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out.astype(q.dtype)

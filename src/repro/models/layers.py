@@ -1,0 +1,101 @@
+"""Shared neural-net layers: RMSNorm, SwiGLU MLP, RoPE (standard + M-RoPE).
+
+Everything is a pure function over explicit param pytrees — no framework
+module system.  Param init mirrors llama-family conventions (truncated-normal
+projections scaled by fan-in, ones for norms).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+    # note: "1 + w" gemma-style so zero-init == identity; init stores zeros
+
+
+def init_rms_norm(d):
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, (d_model, d_ff)),
+        "up": dense_init(k2, (d_model, d_ff)),
+        "down": dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def mlp(params, x):
+    h = jax.nn.silu(x @ params["gate"].astype(x.dtype))
+    h = h * (x @ params["up"].astype(x.dtype))
+    return h @ params["down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float):
+    """(head_dim // 2,) inverse frequencies."""
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """Standard rotary embedding.
+
+    x: (B, S, H, D); positions: (B, S) int32.
+    """
+    inv_freq = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (B,S,D/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions, theta: float, sections):
+    """Multimodal RoPE (qwen2-vl, arXiv:2409.12191).
+
+    positions: (3, B, S) — temporal / height / width position streams.
+    ``sections`` partitions the head_dim//2 frequency bands among the three
+    streams; each band rotates by its assigned stream's position.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    inv_freq = rope_frequencies(x.shape[-1], theta)          # (half,)
+    # (3, B, S, half)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq
+    # select the stream per frequency band via one-hot contraction
+    sel = np.concatenate([np.full((s,), i) for i, s in enumerate(sections)])
+    onehot = jax.nn.one_hot(jnp.asarray(sel), 3, dtype=angles.dtype)  # (half,3)
+    angles = jnp.einsum("tbsf,ft->bsf", angles, onehot)      # (B, S, half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(logits / cap) * cap
+    return logits

@@ -1,0 +1,198 @@
+"""Mamba2 (SSD) mixer block — chunked-scan implementation.
+
+State-space recurrence per head h (scalar decay, matrix state):
+
+    S_t = exp(A_h * dt_t) * S_{t-1} + dt_t * (x_t ⊗ B_t)     S: (head_dim, N)
+    y_t = S_t · C_t + D_h * x_t
+
+The chunked algorithm (Mamba2 paper §6, "SSD") splits the sequence into
+chunks of Q tokens.  Intra-chunk contributions form a (Q, Q) decay-masked
+attention-like matrix (cheap: decay is scalar per head); inter-chunk state is
+propagated with a single ``lax.scan`` over chunks, which also yields the
+final state for decode handoff.  Memory is O(S·Q), never O(S²).
+
+Hardware note (DESIGN.md §2): on GPU Mamba2 fuses this into a warp-level
+kernel; on TPU the chunk einsums map straight onto the MXU and the chunk
+scan onto XLA's while-loop, so a pure-jnp formulation is already near the
+hardware — the Pallas opportunity is in attention/top-k, not here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_rms_norm, rms_norm
+
+
+class MambaCache(NamedTuple):
+    ssm: jax.Array      # (B, nh, head_dim, N)
+    conv: jax.Array     # (B, conv_width-1, conv_dim)
+
+
+def conv_dim(cfg):
+    return cfg.ssm_inner_dim + 2 * cfg.ssm_state_size
+
+
+def init_mamba2(key, cfg):
+    """Projections are SPLIT per destination (z / x / B / C / dt) rather than
+    fused: slicing a model-sharded fused output forces SPMD halo exchanges
+    (collective-permute) on every use — 121 GB/step in the zamba2 train_4k
+    baseline (§Perf).  Depthwise conv splits exactly, so three convs replace
+    the fused one with identical math."""
+    d_in = cfg.ssm_inner_dim
+    n = cfg.ssm_state_size
+    nh = cfg.ssm_num_heads
+    ks = jax.random.split(key, 10)
+    return {
+        "in_z": dense_init(ks[0], (cfg.d_model, d_in)),
+        "in_x": dense_init(ks[1], (cfg.d_model, d_in)),
+        "in_b": dense_init(ks[2], (cfg.d_model, n)),
+        "in_c": dense_init(ks[3], (cfg.d_model, n)),
+        "in_dt": dense_init(ks[4], (cfg.d_model, nh)),
+        "conv_x": dense_init(ks[5], (cfg.ssm_conv_width, d_in), scale=0.5),
+        "conv_b": dense_init(ks[6], (cfg.ssm_conv_width, n), scale=0.5),
+        "conv_c": dense_init(ks[7], (cfg.ssm_conv_width, n), scale=0.5),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "D": jnp.ones((nh,)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[8], (nh,)) * 3.5 - 4.6))),
+        "gate_norm": init_rms_norm(d_in),
+        "out_proj": dense_init(ks[9], (d_in, cfg.d_model)),
+    }
+
+
+def _causal_conv(x, w, carry=None):
+    """Depthwise causal conv.  x: (B,S,C), w: (W,C).  carry: (B,W-1,C)."""
+    width = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(width))
+    new_carry = xp[:, -(width - 1):]
+    return out, new_carry
+
+
+def ssd_chunked(x, log_a, b, c, state0, *, chunk: int = 64):
+    """Chunked SSD scan.
+
+    x: (B,S,nh,hd) — already dt-scaled input; log_a: (B,S,nh) — log decay
+    (= A*dt, <= 0); b, c: (B,S,N) shared across heads (ngroups=1);
+    state0: (B,nh,hd,N).  Returns (y (B,S,nh,hd), final state).
+    """
+    B, S, nh, hd = x.shape
+    N = b.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    # chunk-major layout for scan: (nc, B, Q, ...)
+    xq = x.reshape(B, nc, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
+    aq = log_a.reshape(B, nc, chunk, nh).transpose(1, 0, 2, 3)
+    bq = b.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    cq = c.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))            # s <= t
+
+    def body(state, inp):
+        xk, ak, bk, ck = inp                                   # (B,Q,...)
+        cs = jnp.cumsum(ak, axis=1)                            # (B,Q,nh) incl.
+        # intra-chunk: y_t += sum_{s<=t} exp(cs_t - cs_s) (c_t.b_s) x_s
+        # mask BEFORE exp: the s>t half has positive exponents that overflow
+        # to inf and poison gradients through the where
+        diff = cs[:, :, None, :] - cs[:, None, :, :]           # (B,t,s,nh)
+        diff = jnp.where(tri[None, :, :, None], diff, -jnp.inf)
+        decay = jnp.exp(diff)
+        scores = jnp.einsum("btn,bsn->bts", ck, bk)            # (B,t,s)
+        y = jnp.einsum("bts,btsh,bshd->bthd", scores, decay, xk)
+        # inter-chunk: y_t += c_t . (exp(cs_t) * state)
+        y = y + jnp.einsum("btn,bth,bhdn->bthd", ck, jnp.exp(cs), state)
+        # state update: S' = exp(cs_last)*S + sum_s exp(cs_last - cs_s) x_s b_s
+        wlast = jnp.exp(cs[:, -1:, :] - cs)                    # (B,Q,nh)
+        new_state = (state * jnp.exp(cs[:, -1])[:, :, None, None]
+                     + jnp.einsum("bsh,bshd,bsn->bhdn", wlast, xk, bk))
+        return new_state, y
+
+    state_f, yq = jax.lax.scan(body, state0.astype(jnp.float32),
+                               (xq.astype(jnp.float32),
+                                aq.astype(jnp.float32),
+                                bq.astype(jnp.float32),
+                                cq.astype(jnp.float32)))
+    y = yq.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, nh, hd)
+    return y[:, :S].astype(x.dtype), state_f
+
+
+def ssd_reference(x, log_a, b, c, state0):
+    """Token-by-token oracle for tests."""
+    B, S, nh, hd = x.shape
+
+    def step(state, inp):
+        xt, at, bt, ct = inp
+        state = (state * jnp.exp(at)[:, :, None, None]
+                 + jnp.einsum("bhd,bn->bhdn", xt, bt))
+        y = jnp.einsum("bhdn,bn->bhd", state, ct)
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          log_a.transpose(1, 0, 2).astype(jnp.float32),
+          b.transpose(1, 0, 2).astype(jnp.float32),
+          c.transpose(1, 0, 2).astype(jnp.float32))
+    state_f, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), state_f
+
+
+def mamba2_mixer(params, x, cfg, cache: Optional[MambaCache] = None,
+                 *, chunk: int = 64) -> Tuple[jax.Array, MambaCache]:
+    """Full mixer: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    Works for any S >= 1; decode is S == 1 with a cache.
+    """
+    B, S, _ = x.shape
+    d_in, n, nh, hd = (cfg.ssm_inner_dim, cfg.ssm_state_size,
+                       cfg.ssm_num_heads, cfg.ssm_head_dim)
+    z = x @ params["in_z"].astype(x.dtype)
+    xs_ = x @ params["in_x"].astype(x.dtype)
+    b_ = x @ params["in_b"].astype(x.dtype)
+    c_ = x @ params["in_c"].astype(x.dtype)
+    dt = x @ params["in_dt"].astype(x.dtype)
+    cw = cfg.ssm_conv_width - 1
+    conv_carry = cache.conv if cache is not None else None
+    cx = conv_carry[..., :d_in] if conv_carry is not None else None
+    cb = (conv_carry[..., d_in:d_in + n]
+          if conv_carry is not None else None)
+    cc = conv_carry[..., d_in + n:] if conv_carry is not None else None
+    xs_, ncx = _causal_conv(xs_, params["conv_x"], cx)
+    b_, ncb = _causal_conv(b_, params["conv_b"], cb)
+    c_, ncc = _causal_conv(c_, params["conv_c"], cc)
+    new_conv = jnp.concatenate([ncx, ncb, ncc], axis=-1)
+    xs = jax.nn.silu(xs_).reshape(B, S, nh, hd)
+    b = jax.nn.silu(b_)
+    c = jax.nn.silu(c_)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])                  # (B,S,nh)
+    log_a = -jnp.exp(params["A_log"]) * dt                     # <= 0
+    x_dt = xs.astype(jnp.float32) * dt[..., None]
+    state0 = (cache.ssm if cache is not None
+              else jnp.zeros((B, nh, hd, n), jnp.float32))
+    if S == 1:
+        y, state_f = ssd_reference(x_dt, log_a, b, c, state0)
+    else:
+        y, state_f = ssd_chunked(x_dt, log_a, b, c, state0, chunk=chunk)
+    y = y + xs.astype(y.dtype) * params["D"][:, None].astype(y.dtype)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, MambaCache(ssm=state_f, conv=new_conv)
+
+
+def init_mamba_cache(cfg, batch, dtype=jnp.float32) -> MambaCache:
+    return MambaCache(
+        ssm=jnp.zeros((batch, cfg.ssm_num_heads, cfg.ssm_head_dim,
+                       cfg.ssm_state_size), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim(cfg)), dtype),
+    )

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts block: top-k router + sort-based capacity dispatch.
+
+TPU-native dispatch (no (T,E,C) one-hot tensor, which is intractable at
+T ≈ 1M tokens for train_4k):
+
+  1. router logits -> top-k experts per token, softmax-renormalized gates
+  2. flatten the (token, slot) assignments, sort by expert id
+  3. position-within-expert via a cumsum over the sorted one-hot; assignments
+     beyond the per-expert capacity C are DROPPED (standard capacity-factor
+     semantics — dropped tokens pass through the residual only)
+  4. gather tokens into an (E, C, d) buffer, batched einsum per expert,
+     combine back with a segment-sum weighted by the gate
+
+Sharding: experts shard over the "model" mesh axis, token buffers over
+"data"; at baseline GSPMD inserts the all-to-all implied by (4)'s gathers.
+The §Perf hillclimb may replace this with an explicit shard_map all-to-all.
+
+Load-balance auxiliary loss follows Switch/OLMoE: E * mean(frac_tokens_e *
+frac_router_prob_e), returned so train_step can add it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_moe(key, d_model, d_ff, num_experts):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, (d_model, num_experts), scale=0.02),
+        "gate": dense_init(k2, (num_experts, d_model, d_ff)),
+        "up": dense_init(k3, (num_experts, d_model, d_ff)),
+        "down": dense_init(k4, (num_experts, d_ff, d_model)),
+    }
+
+
+def moe_block(params, x, *, num_experts: int, top_k: int,
+              capacity_factor: float = 1.25, capacity: int = 0):
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar).
+
+    ``capacity`` > 0 overrides the factor-derived per-expert capacity;
+    serving passes capacity=T (dropless — worst case routes every token to
+    one expert)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    dtype = x.dtype
+
+    logits = (xf @ params["router"].astype(dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)        # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux loss (Switch eq. 4) ----
+    me = jnp.mean(probs, axis=0)                               # router prob mass
+    one_hot_top1 = jax.nn.one_hot(expert_ids, num_experts,
+                                  dtype=jnp.float32)           # (T,K,E)
+    ce = jnp.mean(one_hot_top1.sum(1), axis=0) / top_k         # token fraction
+    aux = num_experts * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----
+    if capacity <= 0:
+        capacity = int(max(top_k, t * top_k / num_experts * capacity_factor))
+    flat_expert = expert_ids.reshape(-1)                       # (T*K,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t), top_k)
+
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    # position of each assignment within its expert's contiguous run
+    seg_onehot_cum = jnp.cumsum(
+        jax.nn.one_hot(sorted_expert, num_experts, dtype=jnp.int32), axis=0)
+    pos_in_expert = jnp.take_along_axis(
+        seg_onehot_cum, sorted_expert[:, None], axis=1)[:, 0] - 1
+    keep = pos_in_expert < capacity
+
+    slot = sorted_expert * capacity + pos_in_expert            # (T*K,)
+    slot = jnp.where(keep, slot, num_experts * capacity)       # overflow bin
+
+    # scatter tokens into (E*C+1, d); the +1 row swallows drops
+    buf = jnp.zeros((num_experts * capacity + 1, d), dtype)
+    buf = buf.at[slot].set(xf[sorted_token])
+    buf = buf[:-1].reshape(num_experts, capacity, d)
+
+    # ---- expert FFN (batched over experts) ----
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                               params["gate"].astype(dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["up"].astype(dtype))
+    y = jnp.einsum("ecf,efd->ecd", h, params["down"].astype(dtype))
+    y = y.reshape(num_experts * capacity, d)
+    y = jnp.concatenate([y, jnp.zeros((1, d), dtype)], axis=0)
+
+    # ---- combine: out[token] += gate * y[slot] ----
+    contrib = y[slot] * (sorted_gate[:, None].astype(dtype) *
+                         keep[:, None].astype(dtype))
+    out = jnp.zeros((t, d), dtype).at[sorted_token].add(contrib)
+    return out.reshape(b, s, d), aux

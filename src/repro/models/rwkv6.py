@@ -1,0 +1,185 @@
+"""RWKV6 ("Finch") block — data-dependent per-channel decay WKV recurrence.
+
+Per head (dk = dv = head_dim), matrix-valued state S: (dk, dv):
+
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t          w_t ∈ (0,1)^{dk}, data-dep.
+    o_t = r_t · (S_{t-1} + diag(u) (k_t ⊗ v_t))   u: learned "bonus"
+
+w_t = exp(-exp(w0 + tanh(x̄_t W1) W2)) — the Finch low-rank data-dependent
+decay.  Token shift (lerp with the previous token) feeds every projection.
+
+Chunked evaluation: intra-chunk contributions need the PAIRWISE decay
+exp(csl_t - cs_s) per channel (unlike Mamba2's scalar decay), which is only
+numerically safe computed as a difference — never factorized into
+exp(csl_t)·exp(-cs_s) (exp(-cs_s) overflows under strong decay).  We
+therefore materialize a (B, Q, Q, dk)-per-head tensor for a small chunk
+(Q=32 default) inside a lax.scan over chunks.  O(S·Q·dk) memory.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_rms_norm, rms_norm
+
+DECAY_LORA = 64
+
+
+class RwkvCache(NamedTuple):
+    wkv: jax.Array       # (B, H, dk, dv) f32
+    shift_t: jax.Array   # (B, d_model) last token (time-mix)
+    shift_c: jax.Array   # (B, d_model) last token (channel-mix)
+
+
+def init_rwkv6(key, cfg):
+    d = cfg.d_model
+    hd = cfg.ssm_head_dim
+    H = d // hd
+    ks = jax.random.split(key, 10)
+    return {
+        "norm_t": init_rms_norm(d),
+        "mu": 0.5 * jnp.ones((5, d)),          # shift-mix for r,k,v,g,w
+        "Wr": dense_init(ks[0], (d, d)),
+        "Wk": dense_init(ks[1], (d, d)),
+        "Wv": dense_init(ks[2], (d, d)),
+        "Wg": dense_init(ks[3], (d, d)),
+        "Wo": dense_init(ks[4], (d, d)),
+        "w0": jnp.full((d,), -0.6),            # base decay ~ exp(-exp(-0.6))
+        "w1": dense_init(ks[5], (d, DECAY_LORA), scale=0.02),
+        "w2": dense_init(ks[6], (DECAY_LORA, d), scale=0.02),
+        "u": 0.1 * jnp.ones((H, hd)),
+        "norm_c": init_rms_norm(d),
+        "mu_c": 0.5 * jnp.ones((d,)),
+        "Wck": dense_init(ks[7], (d, cfg.d_ff)),
+        "Wcv": dense_init(ks[8], (cfg.d_ff, d)),
+    }
+
+
+def _token_shift(x, carry):
+    """x: (B,S,d); carry: (B,d) = last token of the previous segment."""
+    prev = jnp.concatenate([carry[:, None, :], x[:, :-1]], axis=1)
+    return prev, x[:, -1]
+
+
+def wkv6_recurrent(r, k, v, logw, u, state0):
+    """Token-by-token oracle.  r/k/v: (B,S,H,K); logw: (B,S,H,K) (<=0);
+    u: (H,K); state0: (B,H,K,V).  Returns (o: (B,S,H,V), final state)."""
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # (B,H,K) / (B,H,V)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = S * jnp.exp(wt)[..., None] + kv
+        return S, o
+
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32)
+               for a in (r, k, v, logw))
+    S, o = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return o.transpose(1, 0, 2, 3), S
+
+
+def wkv6_chunked(r, k, v, logw, u, state0, *, chunk: int = 32):
+    """Chunked scan; exact (no approximation), stable pairwise decays."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(a, zp) for a in (r, k, v))
+        logw = jnp.pad(logw, zp)                   # pad decay 0 => w=1, k=0
+    nc = r.shape[1] // chunk
+    cm = lambda a: a.reshape(B, nc, chunk, H, -1).transpose(1, 0, 2, 3, 4)
+    rq, kq, vq, wq = (cm(a.astype(jnp.float32)) for a in (r, k, v, logw))
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)      # s < t
+
+    def body(S, inp):
+        rk, kk, vk, wk = inp                       # (B,Q,H,K|V)
+        cs = jnp.cumsum(wk, axis=1)                # inclusive  (B,Q,H,K)
+        csl = cs - wk                              # exclusive: sum_{i<t}
+        # pairwise per-channel decay: D[t,s] = exp(csl_t - cs_s), s < t.
+        # mask BEFORE exp — the s >= t half has positive exponents that can
+        # overflow to inf and poison gradients through the where.
+        diff = csl[:, :, None] - cs[:, None, :]    # (B,t,s,H,K)
+        diff = jnp.where(mask[None, :, :, None, None], diff, -jnp.inf)
+        A = jnp.exp(diff)
+        # intra: o_t = sum_{s<t} (r_t ⊙ D[t,s]) · k_s  v_s
+        scores = jnp.einsum("bthk,btshk,bshk->bths", rk, A, kk)
+        o = jnp.einsum("bths,bshv->bthv", scores, vk)
+        # bonus (s == t): (r_t · (u ⊙ k_t)) v_t
+        bonus = jnp.einsum("bthk,hk,bthk->bth", rk, u.astype(jnp.float32), kk)
+        o = o + bonus[..., None] * vk
+        # state-in: o_t += (r_t ⊙ exp(csl_t)) · S
+        o = o + jnp.einsum("bthk,bhkv->bthv", rk * jnp.exp(csl), S)
+        # state-out: S' = diag(exp(cs_last)) S + sum_s exp(cs_last - cs_s) k_s v_s
+        wl = jnp.exp(cs[:, -1, None] - cs)         # (B,Q,H,K)
+        S = (S * jnp.exp(cs[:, -1])[..., None]
+             + jnp.einsum("bshk,bshv->bhkv", kk * wl, vk))
+        return S, o
+
+    S_f, oq = jax.lax.scan(body, state0.astype(jnp.float32), (rq, kq, vq, wq))
+    o = oq.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, H, V)
+    return o[:, :S], S_f
+
+
+def rwkv6_time_mix(params, x, cfg, cache: Optional[RwkvCache],
+                   *, chunk: int = 32):
+    """x: (B,S,d) (already normed).  Returns (out, (wkv_state, shift_carry))."""
+    B, S, d = x.shape
+    hd = cfg.ssm_head_dim
+    H = d // hd
+    carry = (cache.shift_t if cache is not None
+             else jnp.zeros((B, d), x.dtype))
+    prev, new_carry = _token_shift(x, carry)
+    mu = params["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + mu[i] * (prev - x) for i in range(5))
+    r = (xr @ params["Wr"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (xk @ params["Wk"].astype(x.dtype)).reshape(B, S, H, hd)
+    v = (xv @ params["Wv"].astype(x.dtype)).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ params["Wg"].astype(x.dtype))
+    # data-dependent log decay (Finch): logw = -exp(w0 + tanh(xw W1) W2)
+    ww = (params["w0"].astype(jnp.float32)
+          + jnp.tanh(xw.astype(jnp.float32) @ params["w1"])
+          @ params["w2"])                                     # (B,S,d)
+    logw = -jnp.exp(jnp.clip(ww, -20.0, 10.0)).reshape(B, S, H, hd)
+    state0 = (cache.wkv if cache is not None
+              else jnp.zeros((B, H, hd, hd), jnp.float32))
+    if S == 1:
+        o, state_f = wkv6_recurrent(r, k, v, logw, params["u"], state0)
+    else:
+        o, state_f = wkv6_chunked(r, k, v, logw, params["u"], state0,
+                                  chunk=chunk)
+    o = o.reshape(B, S, d).astype(x.dtype) * g
+    return o @ params["Wo"].astype(x.dtype), (state_f, new_carry)
+
+
+def rwkv6_channel_mix(params, x, cfg, cache: Optional[RwkvCache]):
+    B, S, d = x.shape
+    carry = (cache.shift_c if cache is not None
+             else jnp.zeros((B, d), x.dtype))
+    prev, new_carry = _token_shift(x, carry)
+    mu = params["mu_c"].astype(x.dtype)
+    xk = x + mu * (prev - x)
+    h = jnp.square(jax.nn.relu(xk @ params["Wck"].astype(x.dtype)))
+    return h @ params["Wcv"].astype(x.dtype), new_carry
+
+
+def rwkv6_block(params, x, cfg, cache: Optional[RwkvCache] = None,
+                *, chunk: int = 32) -> Tuple[jax.Array, RwkvCache]:
+    h = rms_norm(x, params["norm_t"], cfg.norm_eps)
+    tm, (wkv_state, shift_t) = rwkv6_time_mix(params, h, cfg, cache,
+                                              chunk=chunk)
+    x = x + tm
+    h = rms_norm(x, params["norm_c"], cfg.norm_eps)
+    cmix, shift_c = rwkv6_channel_mix(params, h, cfg, cache)
+    x = x + cmix
+    return x, RwkvCache(wkv=wkv_state, shift_t=shift_t, shift_c=shift_c)
+
+
+def init_rwkv_cache(cfg, batch, dtype=jnp.float32) -> RwkvCache:
+    d, hd = cfg.d_model, cfg.ssm_head_dim
+    return RwkvCache(
+        wkv=jnp.zeros((batch, d // hd, hd, hd), jnp.float32),
+        shift_t=jnp.zeros((batch, d), dtype),
+        shift_c=jnp.zeros((batch, d), dtype),
+    )

@@ -1,0 +1,4 @@
+from repro.serving.engine import RAGEngine, RAGResponse  # noqa
+from repro.serving.scheduler import Request, RequestScheduler  # noqa
+from repro.serving.simulator import EdgeSimulator, simulate_ttft  # noqa
+from repro.serving.batching import ContinuousBatcher  # noqa

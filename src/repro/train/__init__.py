@@ -1,0 +1,4 @@
+from repro.train.optimizer import (adamw_init, adamw_update,  # noqa
+                                   cosine_schedule, global_norm)
+from repro.train.train_step import TrainState, make_train_step, train_state_init  # noqa
+from repro.train.checkpoint import load_checkpoint, save_checkpoint  # noqa

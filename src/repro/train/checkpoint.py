@@ -1,0 +1,46 @@
+"""Checkpointing: pytree <-> .npz with path-keyed entries.
+
+Good enough for single-host examples; a production deployment would swap in
+a sharded async checkpointer, but the on-disk format (path-addressable
+leaves) is the same idea.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: Any):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {_path_str(p): np.asarray(v) for p, v in flat}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, v in flat:
+        key = _path_str(p)
+        arr = data[key]
+        assert arr.shape == v.shape, (key, arr.shape, v.shape)
+        leaves.append(arr.astype(v.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

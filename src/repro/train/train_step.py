@@ -1,0 +1,47 @@
+"""train_step: loss + grads + AdamW update, one jit-able function.
+
+This is what the train_4k dry-run shape lowers for every architecture.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import loss_fn
+from repro.train.optimizer import (AdamWState, adamw_init, adamw_update,
+                                   cosine_schedule)
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+    step: jax.Array
+
+
+def train_state_init(params) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: ModelConfig, *, peak_lr: float = 3e-4,
+                    total_steps: int = 10_000, compute_dtype=jnp.float32,
+                    attn_impl: str = "auto", dist=None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, cfg, batch,
+                                   compute_dtype=compute_dtype,
+                                   attn_impl=attn_impl, dist=dist)
+        lr = cosine_schedule(state.step, peak_lr=peak_lr, total=total_steps)
+        new_params, new_opt, gnorm = adamw_update(
+            grads, state.opt, state.params, lr=lr)
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
+                   "grad_norm": gnorm, "lr": lr}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run on ONE cpu device (the dry-run alone forces 512 — never here)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,71 @@
+"""analysis/: HLO collective parser + roofline arithmetic."""
+import numpy as np
+
+from repro.analysis.hlo import collective_bytes, collective_sites
+from repro.analysis.roofline import model_flops_estimate, roofline
+from repro import configs
+from repro.configs.shapes import INPUT_SHAPES
+
+HLO = """
+HloModule jit_step
+  %ag = bf16[8,128]{1,0} all-gather(bf16[1,128]{1,0} %p0), replica_groups=[2,8]<=[16], dimensions={0}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(f32[256]{0} %y), replica_groups=[4,4]<=[16], dimensions={0}
+  %cp = bf16[32,32]{1,0} collective-permute(bf16[32,32]{1,0} %z), source_target_pairs={{0,1}}
+  %ata = f32[16,16]{1,0} all-to-all(f32[16,16]{1,0} %w), replica_groups=[2,8]<=[16]
+  %agd = bf16[8,128]{1,0} all-gather-done(bf16[8,128] %h)
+  // %comment = f32[999]{0} all-reduce(...)
+"""
+
+
+def test_collective_bytes_parses_ops_and_groups():
+    total, by_op, counts = collective_bytes(HLO)
+    # all-gather: 8*128*2 bytes * (8-1)/8
+    assert abs(by_op["all-gather"] - 8 * 128 * 2 * 7 / 8) < 1e-6
+    # all-reduce: 256*4 * 2*(4-1)/4
+    assert abs(by_op["all-reduce"] - 256 * 4 * 2 * 3 / 4) < 1e-6
+    # reduce-scatter: result 64*4 * (4-1)
+    assert abs(by_op["reduce-scatter"] - 64 * 4 * 3) < 1e-6
+    # collective-permute: raw bytes
+    assert abs(by_op["collective-permute"] - 32 * 32 * 2) < 1e-6
+    # all-to-all: 16*16*4 * 7/8
+    assert abs(by_op["all-to-all"] - 16 * 16 * 4 * 7 / 8) < 1e-6
+    assert counts["all-gather"] == 1          # -done not double counted
+    assert sum(counts.values()) == 5
+    assert abs(total - sum(by_op.values())) < 1e-9
+
+
+def test_collective_sites_attribution():
+    hlo = ('%x = f32[1024]{0} all-reduce(f32[1024]{0} %a), '
+           'replica_groups={{0,1}}, metadata={op_name="jit(f)/foo/dot"}')
+    sites = collective_sites(hlo)
+    assert sites[0][1] == "all-reduce"
+    assert sites[0][2] == "jit(f)/foo/dot"
+    assert sites[0][0] == 4096
+
+
+def test_roofline_terms_and_dominance():
+    rep = roofline(arch="x", shape="train_4k", mesh_name="16x16", chips=256,
+                   hlo_flops=197e12, hlo_bytes=819e9, collective_bytes=25e9,
+                   collective_by_op={}, model_flops=1e16)
+    assert abs(rep.compute_s - 1.0) < 1e-9
+    assert abs(rep.memory_s - 1.0) < 1e-9
+    assert abs(rep.collective_s - 0.5) < 1e-9
+    assert rep.dominant in ("compute", "memory")
+    assert rep.step_time_s == 1.0
+    assert 0 < rep.mfu < 1
+
+
+def test_model_flops_scales_with_shape():
+    cfg = configs.get_config("yi-9b")
+    f_train = model_flops_estimate(cfg, INPUT_SHAPES["train_4k"])
+    f_prefill = model_flops_estimate(cfg, INPUT_SHAPES["prefill_32k"])
+    f_decode = model_flops_estimate(cfg, INPUT_SHAPES["decode_32k"])
+    assert f_train > f_prefill > f_decode > 0
+    # decode processes B tokens; 2*N_active*B is a lower bound
+    assert f_decode >= 2 * cfg.active_param_count() * 128
+
+
+def test_moe_active_flops_smaller_than_total():
+    cfg = configs.get_config("olmoe-1b-7b")
+    assert cfg.active_param_count() < 0.3 * cfg.param_count()

@@ -1,0 +1,83 @@
+"""Algorithm 2 (cost-aware LFU) and Algorithm 3 (adaptive threshold) unit
+behaviour, exactly as specified in the paper."""
+import numpy as np
+
+from repro.core.cache_policy import (CostAwareLFUCache,
+                                     MinLatencyThresholdController)
+
+
+def _emb(n=4):
+    return np.ones((n, 8), np.float32)  # 128 B each
+
+
+def test_lfu_evicts_min_weight():
+    """eviction victim = argmin(genLatency * counter)."""
+    cache = CostAwareLFUCache(capacity_bytes=3 * 32, decay_factor=1.0)
+    cache.insert(1, _emb(1), gen_latency=1.0)
+    cache.insert(2, _emb(1), gen_latency=10.0)
+    cache.insert(3, _emb(1), gen_latency=5.0)
+    cache.access(1)  # counter(1)=2 -> weight 2.0
+    # weights: 1: 1*2=2, 2: 10*1=10, 3: 5*1=5  -> evict 1
+    cache.insert(4, _emb(1), gen_latency=2.0)
+    assert 1 not in cache and 2 in cache and 3 in cache and 4 in cache
+
+
+def test_counter_decay_ages_out_stale_entries():
+    cache = CostAwareLFUCache(capacity_bytes=2 * 32, decay_factor=0.5)
+    cache.insert(1, _emb(1), gen_latency=1.0)
+    cache.insert(2, _emb(1), gen_latency=1.0)
+    for _ in range(6):
+        cache.access(2)   # keeps 2 hot; 1's counter halves every access
+    cache.insert(3, _emb(1), gen_latency=1.0)
+    assert 1 not in cache and 2 in cache
+
+
+def test_capacity_never_exceeded():
+    cache = CostAwareLFUCache(capacity_bytes=1000)
+    for i in range(50):
+        cache.insert(i, _emb(2), gen_latency=float(i + 1))
+        assert cache.total_bytes() <= 1000
+
+
+def test_threshold_blocks_cheap_insert():
+    cache = CostAwareLFUCache(capacity_bytes=10_000)
+    cache.insert(1, _emb(1), gen_latency=0.05, min_latency_threshold=0.1)
+    assert 1 not in cache
+    cache.insert(2, _emb(1), gen_latency=0.5, min_latency_threshold=0.1)
+    assert 2 in cache
+
+
+def test_drop_below_threshold():
+    cache = CostAwareLFUCache(capacity_bytes=10_000)
+    cache.insert(1, _emb(1), gen_latency=0.05)
+    cache.insert(2, _emb(1), gen_latency=0.50)
+    cache.drop_below_threshold(0.1)
+    assert 1 not in cache and 2 in cache
+
+
+def test_alg3_threshold_dynamics():
+    """miss + below-average latency => threshold rises; hit => falls."""
+    ctl = MinLatencyThresholdController(step_s=0.01)
+    ctl.observe(cache_miss=True, last_latency=1.0)   # init avg
+    t1 = ctl.observe(cache_miss=True, last_latency=0.1)   # cheap miss -> up
+    assert t1 > 0
+    t2 = ctl.observe(cache_miss=False, last_latency=0.1)  # hit -> down
+    assert t2 < t1
+    # threshold never negative
+    for _ in range(10):
+        t = ctl.observe(cache_miss=False, last_latency=0.1)
+    assert t == 0.0
+
+
+def test_alg3_expensive_miss_does_not_raise():
+    ctl = MinLatencyThresholdController(step_s=0.01)
+    ctl.observe(cache_miss=True, last_latency=0.1)
+    t = ctl.observe(cache_miss=True, last_latency=5.0)  # costly miss
+    assert t == 0.0
+
+
+def test_moving_average_tracks():
+    ctl = MinLatencyThresholdController(ema_alpha=0.5)
+    ctl.observe(cache_miss=False, last_latency=1.0)
+    ctl.observe(cache_miss=False, last_latency=0.0)
+    assert abs(ctl.moving_avg_latency - 0.5) < 1e-9

@@ -1,0 +1,167 @@
+"""EdgeRAG core behaviour: index equivalence, selective storage (Alg. 1),
+online updates (§5.4), and the Table 4 ablation orderings."""
+import numpy as np
+import pytest
+
+from repro.core import (EdgeCostModel, EdgeRAGIndex, FlatIndex, IVFIndex,
+                        kmeans)
+from repro.data import generate_dataset
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return generate_dataset(n_records=1200, dim=48, n_topics=40,
+                            n_queries=120, seed=3)
+
+
+@pytest.fixture(scope="module")
+def stack(ds):
+    cost = EdgeCostModel()
+    flat = FlatIndex(48, cost)
+    flat.add(ds.embeddings, ds.chunk_ids)
+    ivf = IVFIndex(48, cost)
+    ivf.build(ds.embeddings, ds.chunk_ids, nlist=40, seed=1)
+    er = EdgeRAGIndex(48, ds.embedder, ds.get_chunks, cost, slo_s=0.3,
+                      cache_bytes=1 << 20)
+    er.build(ds.chunk_ids, ds.texts, nlist=40, embeddings=ds.embeddings,
+             seed=1)
+    return flat, ivf, er
+
+
+def test_kmeans_assigns_nearest_centroid(ds):
+    cents, assign = kmeans(ds.embeddings, 16, iters=5, seed=0)
+    x = ds.embeddings / np.linalg.norm(ds.embeddings, axis=1, keepdims=True)
+    sims = x @ cents.T
+    np.testing.assert_array_equal(assign, sims.argmax(1))
+    np.testing.assert_allclose(np.linalg.norm(cents, axis=1), 1.0, atol=1e-5)
+
+
+def test_edgerag_results_identical_to_ivf(stack, ds):
+    """§6.3.1: EdgeRAG retrieval ≡ two-level IVF retrieval (same clustering)."""
+    _, ivf, er = stack
+    for qi in range(40):
+        i_ids, i_vals, _ = ivf.search(ds.query_embs[qi], 10, 5)
+        e_ids, e_vals, _ = er.search(ds.query_embs[qi], 10, 5)
+        assert set(i_ids[0].tolist()) == set(e_ids[0].tolist())
+        np.testing.assert_allclose(np.sort(i_vals[0]), np.sort(e_vals[0]),
+                                   atol=1e-4)
+
+
+def test_recall_improves_with_nprobe(stack, ds):
+    flat, ivf, _ = stack
+    recs = []
+    for nprobe in (1, 4, 16, 40):
+        hits = 0
+        for qi in range(40):
+            f_ids, _, _ = flat.search(ds.query_embs[qi], 10)
+            i_ids, _, _ = ivf.search(ds.query_embs[qi], 10, nprobe)
+            hits += len(set(f_ids[0].tolist()) & set(i_ids[0].tolist()))
+        recs.append(hits / (40 * 10))
+    assert recs[-1] > 0.999       # probing everything == exhaustive
+    assert recs == sorted(recs)   # monotone in nprobe
+
+
+def test_selective_storage_invariant(ds):
+    """Alg. 1: exactly the clusters whose regeneration exceeds the SLO are
+    stored; pruned memory stays tiny."""
+    cost = EdgeCostModel()
+    er = EdgeRAGIndex(48, ds.embedder, ds.get_chunks, cost, slo_s=0.15)
+    er.build(ds.chunk_ids, ds.texts, nlist=40, embeddings=ds.embeddings)
+    for cid, cl in enumerate(er.clusters):
+        expected = cl.gen_latency_est > er.slo_s
+        assert cl.stored == expected
+        assert (cid in er.storage) == expected
+    # pruning: resident memory is centroids + (empty) cache only
+    assert er.memory_bytes() <= er.centroids.nbytes + 1
+    full = ds.embeddings.nbytes
+    assert er.memory_bytes() < 0.1 * full
+
+
+def test_store_heavy_false_never_stores(ds):
+    er = EdgeRAGIndex(48, ds.embedder, ds.get_chunks, EdgeCostModel(),
+                      slo_s=0.01, store_heavy=False, cache_bytes=0)
+    er.build(ds.chunk_ids, ds.texts, nlist=40, embeddings=ds.embeddings)
+    assert er.storage_bytes() == 0
+    ids, _, lat = er.search(ds.query_embs[0], 5, 3)
+    assert lat.n_generated == lat.n_clusters_probed  # everything regenerated
+    assert lat.n_cache_hits == 0
+
+
+def test_cache_reduces_regeneration(ds):
+    cost = EdgeCostModel()
+    er = EdgeRAGIndex(48, ds.embedder, ds.get_chunks, cost, slo_s=10.0,
+                      cache_bytes=4 << 20)
+    er.build(ds.chunk_ids, ds.texts, nlist=40, embeddings=ds.embeddings)
+    gen_calls = []
+    for qi in range(80):
+        _, _, lat = er.search(ds.query_embs[qi], 10, 4)
+        gen_calls.append(lat.n_generated)
+    # Zipf reuse: later queries mostly hit the cache
+    assert sum(gen_calls[40:]) < sum(gen_calls[:40])
+    assert er.cache.hit_rate > 0.3
+
+
+def test_insert_then_retrievable(ds):
+    er = EdgeRAGIndex(48, ds.embedder, ds.get_chunks, EdgeCostModel(),
+                      slo_s=0.5, cache_bytes=1 << 20)
+    er.build(ds.chunk_ids, ds.texts, nlist=40, embeddings=ds.embeddings)
+    new_id = 777_777
+    emb = ds.embeddings[5] + 0.01 * np.random.default_rng(0).standard_normal(48)
+    emb = (emb / np.linalg.norm(emb)).astype(np.float32)
+    ds.add_chunk(new_id, f"doc-{new_id} fresh chunk", emb)
+    cid = er.insert(new_id, ds.get_chunks([new_id])[0])
+    assert cid >= 0
+    ids, _, _ = er.search(emb, 5, 6)
+    assert new_id in ids[0].tolist()
+    # removal really removes
+    er.remove(new_id)
+    ids, _, _ = er.search(emb, 5, 40)
+    assert new_id not in ids[0].tolist()
+    assert er.ntotal == ds.n
+
+
+def test_split_keeps_all_chunks_retrievable(ds):
+    er = EdgeRAGIndex(48, ds.embedder, ds.get_chunks, EdgeCostModel(),
+                      slo_s=0.5, split_max_chars=200)
+    er.build(ds.chunk_ids, ds.texts, nlist=40, embeddings=ds.embeddings)
+    n0, total0 = er.nlist, er.ntotal
+    # trigger a split by inserting into some cluster
+    new_id = 888_888
+    emb = ds.embeddings[0].copy()
+    ds.add_chunk(new_id, f"doc-{new_id} " + "pad " * 64, emb)
+    er.insert(new_id, ds.get_chunks([new_id])[0])
+    assert er.nlist > n0
+    assert er.ntotal == total0 + 1
+
+
+def test_merge_preserves_total(ds):
+    er = EdgeRAGIndex(48, ds.embedder, ds.get_chunks, EdgeCostModel(),
+                      slo_s=0.5, merge_min_size=3)
+    er.build(ds.chunk_ids, ds.texts, nlist=40, embeddings=ds.embeddings)
+    small_cid, small = min(((i, c) for i, c in enumerate(er.clusters)
+                            if c.active and c.size > 1),
+                           key=lambda t: t[1].size)
+    victim = int(small.ids[0])
+    survivors = [int(i) for i in small.ids[1:]]
+    total0 = er.ntotal
+    er.remove(victim)
+    assert er.ntotal == total0 - 1
+    if not er.clusters[small_cid].active:      # merged away
+        # survivors live in some other active cluster
+        all_ids = np.concatenate([c.ids for c in er.clusters if c.active])
+        for s in survivors:
+            assert s in all_ids
+
+
+def test_latency_accounting_consistency(stack, ds):
+    _, _, er = stack
+    _, _, lat = er.search(ds.query_embs[0], 10, 5,
+                          query_chars=int(ds.query_chars[0]))
+    d = lat.as_dict()
+    parts = (d["embed_query_s"] + d["centroid_search_s"] + d["l2_generate_s"]
+             + d["l2_storage_load_s"] + d["l2_cache_hit_s"]
+             + d["l2_mem_load_s"] + d["l2_search_s"])
+    assert abs(parts - d["retrieval_s"]) < 1e-12
+    assert lat.n_clusters_probed == 5
+    assert (lat.n_generated + lat.n_storage_loads + lat.n_cache_hits
+            == lat.n_clusters_probed)

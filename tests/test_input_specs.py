@@ -1,0 +1,59 @@
+"""input_specs: every (arch × shape) builds abstract inputs with the exact
+assigned geometry, without allocating anything."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs.shapes import INPUT_SHAPES
+from repro.launch import input_specs as specs
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED_ARCHS)
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_specs_geometry(arch, shape_name):
+    cfg = configs.get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    sp = specs.input_specs(cfg, shape)
+    if shape.kind == "train":
+        batch = sp["batch"]
+        lead = (batch["embeds"] if cfg.embedding_inputs
+                else batch["tokens"])
+        assert lead.shape[:2] == (shape.global_batch, shape.seq_len)
+        assert batch["labels"].shape == (shape.global_batch, shape.seq_len)
+        if cfg.use_mrope:
+            assert batch["positions"].shape == (3, shape.global_batch,
+                                                shape.seq_len)
+    elif shape.kind == "prefill":
+        batch = sp["batch"]
+        assert "labels" not in batch
+        assert "caches" in sp
+    else:
+        toks = sp["tokens"]
+        assert toks.shape[0] == shape.global_batch
+        assert toks.shape[1] == 1
+        assert sp["cache_len"].shape == ()
+        # every leaf is abstract — nothing allocated
+        for leaf in jax.tree.leaves(sp["caches"]):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "gemma3-12b", "rwkv6-1.6b",
+                                  "zamba2-2.7b"])
+def test_long_context_caches_are_sub_quadratic(arch):
+    """long_500k must NOT allocate O(seq_len) KV for attention archs."""
+    cfg = configs.get_config(arch)
+    sp = specs.input_specs(cfg, INPUT_SHAPES["long_500k"])
+    total = sum(l.size * l.dtype.itemsize
+                for l in jax.tree.leaves(sp["caches"]))
+    # budget: well under a full 524288-length cache for even one layer
+    full_one_layer = (524_288 * cfg.num_kv_heads * cfg.head_dim * 2 * 2)
+    assert total < full_one_layer, (total, full_one_layer)
+
+
+def test_decode32k_cache_matches_seq_len():
+    cfg = configs.get_config("yi-9b")
+    sp = specs.input_specs(cfg, INPUT_SHAPES["decode_32k"])
+    k = sp["caches"][0].k
+    assert k.shape[2] == 32_768      # (R, B, S, KH, D)
+    assert k.shape[1] == 128

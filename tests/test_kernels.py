@@ -1,0 +1,106 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ivf_topk.kernel import topk_ip_pallas
+from repro.kernels.ivf_topk.ops import topk_ip
+from repro.kernels.ivf_topk.ref import topk_ip_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# ivf_topk
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,d,q,k", [
+    (1000, 768, 3, 10), (512, 128, 1, 5), (77, 256, 2, 8),
+    (2048, 64, 4, 32), (130, 768, 1, 100),
+])
+def test_ivf_topk_matches_ref(n, d, q, k):
+    embs = _rand((n, d))
+    qs = _rand((q, d))
+    pv, pi = topk_ip_pallas(embs, qs, min(k, n), interpret=True)
+    rv, ri = topk_ip_ref(embs, qs, min(k, n))
+    np.testing.assert_allclose(np.asarray(pv), np.asarray(rv), atol=2e-4)
+    assert (np.asarray(pi) == np.asarray(ri)).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ivf_topk_dtypes(dtype):
+    embs = _rand((300, 128), dtype)
+    qs = _rand((2, 128), dtype)
+    pv, pi = topk_ip_pallas(embs.astype(jnp.float32),
+                            qs.astype(jnp.float32), 7, interpret=True)
+    rv, ri = topk_ip_ref(embs, qs, 7)
+    # scores computed in f32 in both paths
+    np.testing.assert_allclose(np.asarray(pv), np.asarray(rv),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 2e-4)
+
+
+def test_topk_op_pads_when_k_exceeds_n():
+    vals, idx = topk_ip(_rand((5, 32)), _rand((1, 32)), 10)
+    assert vals.shape == (1, 10) and idx.shape == (1, 10)
+    assert (np.asarray(idx)[0, 5:] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,kh,sq,skv,d,causal,win", [
+    (2, 4, 2, 128, 128, 64, True, 0),
+    (1, 4, 4, 256, 256, 32, True, 64),
+    (2, 2, 1, 128, 256, 64, False, 0),
+    (1, 8, 2, 64, 64, 128, True, 0),
+    (1, 2, 2, 192, 192, 64, True, 100),
+])
+def test_flash_attention_matches_ref(b, h, kh, sq, skv, d, causal, win):
+    q, k, v = _rand((b, h, sq, d)), _rand((b, kh, skv, d)), _rand((b, kh, skv, d))
+    o1 = flash_attention_pallas(q, k, v, causal=causal, window=win,
+                                bq=64, bk=64, interpret=True)
+    o2 = flash_attention_ref(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q, k, v = (_rand((1, 2, 128, 64), jnp.bfloat16) for _ in range(3))
+    o1 = flash_attention_pallas(q, k, v, bq=64, bk=64, interpret=True)
+    o2 = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,kh,smax,d,clen,win", [
+    (2, 4, 2, 512, 64, 300, 0),
+    (1, 8, 8, 256, 32, 256, 64),
+    (3, 4, 1, 512, 128, 17, 0),
+    (1, 2, 2, 1024, 64, 1024, 0),
+])
+def test_decode_attention_matches_ref(b, h, kh, smax, d, clen, win):
+    q = _rand((b, h, d))
+    kc, vc = _rand((b, smax, kh, d)), _rand((b, smax, kh, d))
+    o1 = decode_attention_pallas(q, kc, vc, clen, window=win, bk=128,
+                                 interpret=True)
+    o2 = decode_attention_ref(q, kc, vc, clen, window=win)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_decode_attention_ring_semantics():
+    """circular cache: cache_len >= smax validates everything."""
+    q = _rand((1, 4, 64))
+    kc, vc = _rand((1, 128, 4, 64)), _rand((1, 128, 4, 64))
+    o1 = decode_attention_pallas(q, kc, vc, 10_000, bk=64, interpret=True)
+    o2 = decode_attention_ref(q, kc, vc, 10_000)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)

@@ -1,0 +1,59 @@
+"""Hypothesis: EdgeRAG online-maintenance invariants under random
+insert/remove sequences (§5.4)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EdgeCostModel, EdgeRAGIndex
+from repro.data import generate_dataset
+
+_DS = generate_dataset(n_records=400, dim=24, n_topics=12, n_queries=10,
+                       seed=11)
+
+
+def _fresh_index():
+    er = EdgeRAGIndex(24, _DS.embedder, _DS.get_chunks, EdgeCostModel(),
+                      slo_s=0.2, cache_bytes=1 << 18,
+                      split_max_chars=30_000, merge_min_size=2)
+    er.build(_DS.chunk_ids, _DS.texts, nlist=12, embeddings=_DS.embeddings)
+    return er
+
+
+@settings(max_examples=12, deadline=None)
+@given(ops=st.lists(st.tuples(st.booleans(), st.integers(0, 399)),
+                    min_size=1, max_size=25),
+       seed=st.integers(0, 10_000))
+def test_insert_remove_invariants(ops, seed):
+    er = _fresh_index()
+    rng = np.random.default_rng(seed)
+    live = set(int(i) for i in _DS.chunk_ids)
+    next_id = 500_000 + seed * 1000
+    for is_insert, target in ops:
+        if is_insert:
+            base = _DS.embeddings[target]
+            emb = base + 0.05 * rng.standard_normal(24)
+            emb = (emb / np.linalg.norm(emb)).astype(np.float32)
+            text = f"doc-{next_id} " + "tok " * int(rng.integers(2, 40))
+            _DS.add_chunk(next_id, text, emb)
+            er.insert(next_id, text)
+            live.add(next_id)
+            next_id += 1
+        elif target in live and target < 400:
+            er.remove(target)
+            live.discard(target)
+        # --- invariants after every op ---
+        assert er.ntotal == len(live)
+        total_ids = np.concatenate(
+            [c.ids for c in er.clusters if c.active]
+            or [np.zeros(0, np.int64)])
+        assert len(total_ids) == len(set(total_ids.tolist()))  # no dupes
+        assert set(int(i) for i in total_ids) == live          # exact set
+        for cid, c in enumerate(er.clusters):
+            if not c.active:
+                assert c.size == 0
+                continue
+            # Alg-1 invariant: stored <=> regeneration cost over SLO
+            assert c.stored == (c.gen_latency_est > er.slo_s), cid
+            assert c.stored == (cid in er.storage)
+    # index remains searchable and returns only live ids
+    ids, _, _ = er.search(_DS.query_embs[0], 8, er.nlist)
+    assert all(int(i) in live for i in ids[0] if i >= 0)

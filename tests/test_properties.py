@@ -1,0 +1,113 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache_policy import (CostAwareLFUCache,
+                                     MinLatencyThresholdController)
+from repro.data.chunking import chunk_text
+from repro.data.tokenizer import HashingTokenizer
+from repro.kernels.ivf_topk.ref import topk_ip_ref
+from repro.kernels.ivf_topk.kernel import topk_ip_pallas
+from repro.models.rwkv6 import wkv6_chunked, wkv6_recurrent
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(n=st.integers(1, 300), k=st.integers(1, 32), seed=st.integers(0, 99))
+def test_topk_pallas_equals_ref(n, k, seed):
+    rng = np.random.default_rng(seed)
+    embs = jnp.asarray(rng.standard_normal((n, 32)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((1, 32)), jnp.float32)
+    keff = min(k, n)
+    pv, pi = topk_ip_pallas(embs, q, keff, block_n=64, interpret=True)
+    rv, ri = topk_ip_ref(embs, q, keff)
+    np.testing.assert_allclose(np.asarray(pv), np.asarray(rv), atol=1e-4)
+    assert (np.asarray(pi) == np.asarray(ri)).all()
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 50),
+       ops=st.lists(st.tuples(st.booleans(), st.floats(0.001, 2.0),
+                              st.integers(0, 30)), min_size=1, max_size=60))
+def test_cache_capacity_invariant(seed, ops):
+    """under any access/insert sequence the cache never exceeds capacity and
+    hit/miss counters stay consistent."""
+    cache = CostAwareLFUCache(capacity_bytes=512)
+    rng = np.random.default_rng(seed)
+    accesses = 0
+    for is_insert, lat, key in ops:
+        if is_insert:
+            cache.insert(key, np.ones((rng.integers(1, 4), 8), np.float32),
+                         lat)
+        else:
+            cache.access(key)
+            accesses += 1
+        assert cache.total_bytes() <= 512
+        assert len(cache) * 32 <= 512
+    assert cache.hits + cache.misses == accesses
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.tuples(st.booleans(), st.floats(0.0, 3.0)),
+                min_size=1, max_size=200))
+def test_threshold_never_negative_and_bounded_steps(events):
+    ctl = MinLatencyThresholdController(step_s=0.01)
+    prev = 0.0
+    for miss, lat in events:
+        t = ctl.observe(miss, lat)
+        assert t >= 0.0
+        assert abs(t - prev) <= 0.01 + 1e-12   # moves one step at a time
+        prev = t
+
+
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(text=st.text(alphabet=st.characters(codec="ascii",
+                                           categories=("L", "N", "Z")),
+                    min_size=0, max_size=2000),
+       chunk=st.integers(50, 400), overlap=st.integers(0, 40))
+def test_chunking_covers_text(text, chunk, overlap):
+    chunks = chunk_text(text, chunk_chars=chunk, overlap_chars=overlap)
+    if not text:
+        assert chunks == []
+        return
+    assert all(len(c) <= chunk for c in chunks)
+    # every character position is covered by some chunk (with overlap,
+    # concatenation length >= original)
+    assert sum(len(c) for c in chunks) >= len(text) - len(chunks)
+    assert chunks[0].startswith(text[:1])
+    assert text.endswith(chunks[-1][-1:]) or not chunks[-1]
+
+
+@settings(**SETTINGS)
+@given(st.text(min_size=0, max_size=500), st.integers(8, 64))
+def test_tokenizer_deterministic_and_bounded(text, max_len):
+    tok = HashingTokenizer(vocab_size=1000)
+    a = tok.encode(text, max_len)
+    b = tok.encode(text, max_len)
+    assert a == b
+    assert len(a) <= max_len
+    assert all(0 <= t < 1000 for t in a)
+
+
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(2, 40), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 20))
+def test_wkv6_chunk_size_invariance(s, chunk, seed):
+    """the chunked WKV result is independent of chunk size (exactness)."""
+    rng = np.random.default_rng(seed)
+    b, h, k = 1, 2, 4
+    r, kk, v = (jnp.asarray(rng.standard_normal((b, s, h, k)), jnp.float32)
+                for _ in range(3))
+    logw = -jnp.abs(jnp.asarray(rng.standard_normal((b, s, h, k)),
+                                jnp.float32)) - 0.01
+    u = jnp.asarray(rng.standard_normal((h, k)), jnp.float32)
+    s0 = jnp.zeros((b, h, k, k))
+    o1, f1 = wkv6_chunked(r, kk, v, logw, u, s0, chunk=chunk)
+    o2, f2 = wkv6_recurrent(r, kk, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=2e-4)

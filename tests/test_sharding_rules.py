@@ -1,0 +1,107 @@
+"""Sharding-rule legality for every assigned architecture: each param /
+batch / cache spec must exactly divide its dims on the production mesh.
+
+(The actual 512-device lower+compile is exercised by launch/dryrun.py — a
+separate process because it forces the host-device count; here we validate
+the rules with an abstract mesh so pytest stays on 1 CPU device.)
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro import configs
+from repro.configs.shapes import INPUT_SHAPES
+from repro.launch import input_specs as specs
+from repro.launch import sharding as shd
+
+
+class FakeMesh:
+    """Just axis names + shape — enough for the rule functions."""
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape, dtype=object)
+
+
+MESHES = [FakeMesh((16, 16), ("data", "model")),
+          FakeMesh((2, 16, 16), ("pod", "data", "model"))]
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _check(tree, shardings, mesh):
+    sizes = _axis_sizes(mesh)
+    flat_t = jax.tree.leaves(tree)
+    flat_s = jax.tree.leaves(shardings,
+                             is_leaf=lambda x: hasattr(x, "spec"))
+    assert len(flat_t) == len(flat_s)
+    for leaf, sh in zip(flat_t, flat_s):
+        spec = sh.spec
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            n = int(np.prod([sizes[a] for a in axes]))
+            assert dim % n == 0, (leaf.shape, spec, ax)
+
+
+def _ns_patch(mesh):
+    """monkeypatch NamedSharding to a tuple-carrier for FakeMesh."""
+    class NS:
+        def __init__(self, mesh_, spec):
+            self.spec = spec
+    return NS
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED_ARCHS)
+@pytest.mark.parametrize("mesh", MESHES, ids=["16x16", "2x16x16"])
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_all_specs_divisible(arch, mesh, shape_name, monkeypatch):
+    monkeypatch.setattr(shd, "NamedSharding", _ns_patch(mesh))
+    cfg = configs.get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    params = specs.param_specs(cfg)
+    mode = "train" if shape.kind == "train" else "serve"
+    _check(params, shd.param_shardings(params, mesh, mode), mesh)
+    sp = specs.input_specs(cfg, shape)
+    if shape.kind == "train":
+        _check(sp["batch"], shd.batch_pspec(mesh, sp["batch"]), mesh)
+    else:
+        if "batch" in sp:
+            _check(sp["batch"], shd.batch_pspec(mesh, sp["batch"]), mesh)
+        if "tokens" in sp:
+            _check(sp["tokens"], shd.batch_pspec(mesh, sp["tokens"]), mesh)
+        _check(sp["caches"], shd.cache_pspec(cfg, mesh, sp["caches"]), mesh)
+
+
+@pytest.mark.parametrize("arch", ["granite-moe-3b-a800m", "olmoe-1b-7b"])
+def test_moe_expert_sharding_choice(arch):
+    """64 experts shard over model; 40 experts fall back to ff-dim sharding."""
+    mesh = MESHES[0]
+    cfg = configs.get_config(arch)
+    params = specs.param_specs(cfg)
+    gate = params["blocks"][0]["moe"]["gate"]   # (R, E, d, ff)
+    spec = shd.param_pspec(
+        (jax.tree_util.DictKey("blocks"), jax.tree_util.SequenceKey(0),
+         jax.tree_util.DictKey("moe"), jax.tree_util.DictKey("gate")),
+        gate, mesh)
+    if cfg.num_experts % 16 == 0:
+        assert spec[1] == "model"               # expert-parallel
+    else:
+        assert spec[1] is None and spec[3] == "model"  # ff fallback
+
+
+def test_serve_mode_drops_data_axis():
+    mesh = MESHES[0]
+    cfg = configs.get_config("yi-9b")
+    params = specs.param_specs(cfg)
+    wq = params["blocks"][0]["wq"]
+    path = (jax.tree_util.DictKey("blocks"), jax.tree_util.SequenceKey(0),
+            jax.tree_util.DictKey("wq"))
+    train_spec = shd.param_pspec(path, wq, mesh, "train")
+    serve_spec = shd.param_pspec(path, wq, mesh, "serve")
+    assert "data" in tuple(train_spec)
+    assert "data" not in tuple(serve_spec)
+    assert "model" in tuple(serve_spec)
