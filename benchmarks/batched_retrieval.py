@@ -1,0 +1,146 @@
+"""Batched retrieval fast-path benchmark: ``search_batch`` vs a sequential
+per-query ``search`` loop.
+
+Sweeps batch size × nprobe on a synthetic Zipf-reuse corpus embedded with
+the real :class:`HashingEmbedder` (regeneration compute is genuine work, so
+cross-query cluster dedup and the single coalesced embed call show up in
+wall-clock QPS).  Reports per cell: QPS, speedup over sequential batch-1,
+cross-query cluster-dedup rate, and embed_fn call count, and writes the
+whole grid as JSON (default: ``BENCH_retrieval.json`` at the repo root) so
+the perf trajectory is tracked across PRs.
+
+``python -m benchmarks.batched_retrieval [--out PATH] [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import EdgeCostModel, EdgeRAGIndex
+from repro.data import generate_dataset
+from repro.data.embedder import HashingEmbedder
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_retrieval.json")
+
+DIM = 64
+K = 10
+
+
+def _corpus(n_records: int, n_queries: int, seed: int = 0):
+    """Texts with Zipf topic reuse; queries are perturbed member chunks of
+    Zipf-sampled topics, embedded in the same hashing space as the index."""
+    ds = generate_dataset(n_records=n_records, dim=DIM,
+                          n_topics=max(16, n_records // 60),
+                          n_queries=n_queries, seed=seed)
+    embedder = HashingEmbedder(dim=DIM, seed=7, n_features=2048)
+    corpus_embs = embedder.embed(ds.texts)
+    rng = np.random.default_rng(seed + 1)
+    q_texts = []
+    for t in ds.query_topic:
+        members = np.where(ds.topic_of_chunk == t)[0]
+        q_texts.append(ds.texts[int(rng.choice(members))])
+    query_embs = embedder.embed(q_texts)
+    store = {int(i): txt for i, txt in zip(ds.chunk_ids, ds.texts)}
+    get_chunks = lambda ids: [store[int(i)] for i in ids]
+    return ds, embedder, corpus_embs, query_embs, get_chunks
+
+
+def _fresh_index(ds, embedder, corpus_embs, get_chunks, nlist: int,
+                 **kw) -> EdgeRAGIndex:
+    er = EdgeRAGIndex(DIM, embedder, get_chunks, EdgeCostModel(), **kw)
+    er.build(ds.chunk_ids, ds.texts, nlist=nlist, embeddings=corpus_embs,
+             seed=1)
+    return er
+
+
+def _sweep(ds, embedder, corpus_embs, query_embs, get_chunks, nlist: int,
+           nprobe: int, batch_sizes, index_kw: Dict) -> List[Dict]:
+    nq = len(query_embs)
+    cells = []
+    # sequential batch-1 baseline
+    er = _fresh_index(ds, embedder, corpus_embs, get_chunks, nlist,
+                      **index_kw)
+    calls0 = embedder.calls
+    t0 = time.perf_counter()
+    for qi in range(nq):
+        er.search(query_embs[qi], K, nprobe)
+    seq_elapsed = time.perf_counter() - t0
+    seq_qps = nq / seq_elapsed
+    cells.append(dict(nprobe=nprobe, batch=1, mode="sequential",
+                      qps=seq_qps, speedup=1.0, dedup_rate=0.0,
+                      embed_calls=embedder.calls - calls0))
+    for b in batch_sizes:
+        er = _fresh_index(ds, embedder, corpus_embs, get_chunks, nlist,
+                          **index_kw)
+        calls0 = embedder.calls
+        probed = shared = 0
+        t0 = time.perf_counter()
+        for lo in range(0, nq, b):
+            _, _, lats = er.search_batch(query_embs[lo:lo + b], K, nprobe)
+            probed += sum(l.n_clusters_probed for l in lats)
+            shared += sum(l.n_shared_hits for l in lats)
+        elapsed = time.perf_counter() - t0
+        cells.append(dict(
+            nprobe=nprobe, batch=b, mode="batched", qps=nq / elapsed,
+            speedup=(nq / elapsed) / seq_qps,
+            dedup_rate=shared / max(1, probed),
+            embed_calls=embedder.calls - calls0))
+    return cells
+
+
+def run(out_path: str = DEFAULT_OUT, quick: bool = False) -> Dict:
+    n_records = 1500 if quick else 3000
+    nq = 64 if quick else 128
+    nlist = max(16, n_records // 60)
+    ds, embedder, corpus_embs, query_embs, get_chunks = _corpus(
+        n_records, nq)
+    results = {"n_records": n_records, "n_queries": nq, "nlist": nlist,
+               "k": K, "configs": {}}
+    configs = {
+        # pure online regeneration: every probe regenerates — isolates the
+        # dedup + coalesced-embed win (Table 4 'IVF+Embed.Gen.' row)
+        "embed_gen": dict(store_heavy=False, cache_bytes=0),
+        # full EdgeRAG: selective storage + adaptive cache on top
+        "edgerag": dict(slo_s=0.3, store_heavy=True, cache_bytes=1 << 20),
+    }
+    batch_sizes = (4, 16) if quick else (4, 8, 16)
+    for cfg_name, kw in configs.items():
+        cfg_cells = []
+        for nprobe in (4, 8):
+            cfg_cells += _sweep(ds, embedder, corpus_embs, query_embs,
+                                get_chunks, nlist, nprobe, batch_sizes, kw)
+        results["configs"][cfg_name] = cfg_cells
+        for c in cfg_cells:
+            emit(f"batched_retrieval.{cfg_name}.np{c['nprobe']}.b{c['batch']}",
+                 1e6 / c["qps"],
+                 f"qps={c['qps']:.1f} speedup={c['speedup']:.2f}x "
+                 f"dedup={c['dedup_rate']:.2f} embed_calls={c['embed_calls']}")
+    b16 = [c for c in results["configs"]["embed_gen"]
+           if c["batch"] == 16 and c["nprobe"] == 8]
+    if b16:
+        results["batch16_speedup_np8"] = b16[0]["speedup"]
+        print(f"# batch-16 vs sequential speedup (embed_gen, nprobe=8): "
+              f"{b16[0]['speedup']:.2f}x")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {out_path}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(args.out, args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,10 +7,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (embed_gen_rate, gen_cost_distribution,
-                        generation_quality, kernels, latency_breakdown,
-                        retrieval_quality, roofline_table, tail_latency,
-                        threshold_sweep, ttft)
+from benchmarks import (batched_retrieval, embed_gen_rate,
+                        gen_cost_distribution, generation_quality, kernels,
+                        latency_breakdown, retrieval_quality, roofline_table,
+                        tail_latency, threshold_sweep, ttft)
 
 SUITES = {
     "fig3_latency_breakdown": latency_breakdown.run,
@@ -23,6 +23,10 @@ SUITES = {
     "fig13_ttft": ttft.run,
     "kernels": kernels.run,
     "roofline": roofline_table.run,
+    # batched fast path; also writes BENCH_retrieval.json at the repo root
+    # (batch-1 vs batched QPS, dedup rate, embed calls) so the perf
+    # trajectory is tracked across PRs
+    "batched_retrieval": batched_retrieval.run,
 }
 
 

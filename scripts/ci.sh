@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Minimal CI: fast lane by default (seconds, not minutes); pass --full for
+# the whole tier-1 suite (~5 min).
+#   scripts/ci.sh           -> pytest -m "not slow"
+#   scripts/ci.sh --full    -> full suite
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--full" ]]; then
+    python -m pytest -q
+else
+    python -m pytest -q -m "not slow"
+fi

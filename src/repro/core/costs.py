@@ -91,6 +91,7 @@ class LatencyBreakdown:
     n_generated: int = 0
     n_storage_loads: int = 0
     n_cache_hits: int = 0
+    n_shared_hits: int = 0      # batched search: cluster resolved by a peer
     chars_embedded: int = 0
 
     @property

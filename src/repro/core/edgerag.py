@@ -21,6 +21,30 @@ Table 4 ablations map to constructor flags:
   EdgeRAG               store_heavy=True   cache_bytes>0
 Retrieval results are bit-identical across the three (and to the in-memory
 IVF baseline): the paper's §6.3.1 claim, asserted in tests.
+
+BATCHED RETRIEVAL (:meth:`EdgeRAGIndex.search_batch`): the serving fast
+path for concurrent queries.  One fused centroid top-k runs over the whole
+batch, the probed clusters are union-deduped across queries, and each
+unique cluster is resolved exactly once per batch (storage → cache →
+regenerate).  All cache-miss regenerations are coalesced into a SINGLE
+``embed_fn`` call over the concatenated cluster texts, then split back per
+cluster.  Per-query results are assembled from the shared resolutions in
+each query's own probed order, so (ids, scores) are bit-identical to
+running per-query ``search`` sequentially.
+
+Latency attribution for shared resolutions: each unique cluster has an
+OWNER — the lowest-index query in the batch that probed it.  The owner's
+:class:`LatencyBreakdown` is charged the full resolution cost
+(storage load / cache hit / generation, exactly the single-query formula);
+every other query that probed the same cluster records a *shared hit*
+(``n_shared_hits``) charged only a DRAM re-read (``l2_mem_load_s``) since
+the embeddings are already resident.  The cache is consulted at most once
+per unique cluster per batch (one counter bump + decay per access, as in
+Alg. 2), and the Alg. 3 threshold observes once per query in batch order;
+a query counts as a miss iff it owns at least one regenerated cluster.
+``wall_s`` is the batch wall time amortized uniformly over the queries.
+Single-query ``search`` is a thin wrapper over a batch of one — the
+degenerate case reproduces the seed semantics exactly.
 """
 from __future__ import annotations
 
@@ -78,6 +102,7 @@ class EdgeRAGIndex:
         self.split_max_chars = split_max_chars
         self.merge_min_size = merge_min_size
         self._chunk_chars: Dict[int, int] = {}
+        self._chunk_cluster: Dict[int, int] = {}   # chunk id -> cluster id
 
     # ------------------------------------------------------------------
     # indexing (Fig. 8 + Alg. 1)
@@ -96,11 +121,14 @@ class EdgeRAGIndex:
         self.centroids, assign = kmeans(embeddings, nlist,
                                         iters=kmeans_iters, seed=seed)
         self.clusters = []
+        self._chunk_cluster = {}
         for c in range(self.centroids.shape[0]):
             sel = np.where(assign == c)[0]
             chars = int(sum(len(texts[j]) for j in sel))
             cl = EdgeCluster(ids=chunk_ids[sel], char_count=chars,
                              gen_latency_est=self.cost.embed_latency(chars))
+            for i in cl.ids:
+                self._chunk_cluster[int(i)] = len(self.clusters)
             # ---- Algorithm 1: Selective Index Storage ----
             if self.store_heavy and cl.gen_latency_est > self.slo_s:
                 self.storage.put(len(self.clusters),
@@ -131,78 +159,141 @@ class EdgeRAGIndex:
     # ------------------------------------------------------------------
     # retrieval (Fig. 9)
     # ------------------------------------------------------------------
-    def _resolve_cluster(self, cid: int, lat: LatencyBreakdown
-                         ) -> Tuple[np.ndarray, bool]:
-        """Returns (embeddings, cache_missed)."""
-        cl = self.clusters[cid]
-        # Step 2-3: precomputed? load from storage
-        if cl.stored and cid in self.storage:
-            embs = self.storage.get(cid)
-            lat.l2_storage_load_s += self.cost.storage_load_latency(embs.nbytes)
-            lat.n_storage_loads += 1
-            return embs, False
-        # Step 4: embedding cache
-        cached = self.cache.access(cid)
-        if cached is not None:
-            lat.l2_cache_hit_s += self.cost.mem_load_latency(
-                cached.nbytes, resident_bytes=self.memory_bytes())
-            lat.n_cache_hits += 1
-            return cached, False
-        # Step 4b: regenerate in flight
-        texts = self.get_chunks(cl.ids.tolist())
-        chars = sum(len(t) for t in texts)
-        embs = np.ascontiguousarray(self.embed_fn(texts), np.float32)
-        gen_s = self.cost.embed_latency(chars)
-        lat.l2_generate_s += gen_s
-        lat.n_generated += 1
-        lat.chars_embedded += chars
-        cl.gen_latency_est = gen_s
-        self.cache.insert(cid, embs, gen_s,
-                          min_latency_threshold=self.threshold.threshold)
-        return embs, True
+    def search_batch(self, query_embs: np.ndarray, k: int, nprobe: int,
+                     query_chars: Optional[Sequence[int]] = None
+                     ) -> Tuple[np.ndarray, np.ndarray,
+                                List[LatencyBreakdown]]:
+        """Batched retrieval fast path (see module docstring).
+
+        ``query_embs`` (Q, d); returns (ids (Q, k), scores (Q, k), one
+        :class:`LatencyBreakdown` per query).  Each unique probed cluster is
+        resolved once for the whole batch and all cache-miss regenerations
+        coalesce into a single ``embed_fn`` call; per-query (ids, scores)
+        are bit-identical to a sequential per-query ``search`` loop.
+        """
+        queries = np.atleast_2d(np.asarray(query_embs, np.float32))
+        nq = queries.shape[0]
+        lats = [LatencyBreakdown() for _ in range(nq)]
+        out_ids = np.full((nq, k), -1, np.int64)
+        out_vals = np.full((nq, k), -np.inf, np.float32)
+        with WallTimer() as t:
+            if query_chars is not None:
+                assert len(query_chars) == nq, \
+                    f"query_chars has {len(query_chars)} entries for {nq} queries"
+                for lat, qc in zip(lats, query_chars):
+                    if qc:
+                        lat.embed_query_s = self.cost.embed_latency(int(qc))
+            # Step 1: ONE fused centroid top-k over the whole batch
+            _, probed_all = topk_ip(self.centroids, queries,
+                                    min(nprobe, self.nlist))
+            probed_all = np.asarray(probed_all)
+            centroid_s = (self.cost.mem_load_latency(self.centroids.nbytes)
+                          + self.cost.search_latency(self.nlist, self.dim))
+            probed_per_q: List[List[int]] = []
+            for qi in range(nq):
+                probed = [int(c) for c in probed_all[qi]
+                          if c >= 0 and self.clusters[int(c)].active
+                          and self.clusters[int(c)].size > 0]
+                lats[qi].n_clusters_probed = len(probed)
+                lats[qi].centroid_search_s = centroid_s
+                probed_per_q.append(probed)
+            # Steps 2-5: union-dedup; resolve each unique cluster ONCE.
+            # Owner = first query in batch order that probed the cluster.
+            owner: Dict[int, int] = {}
+            for qi, probed in enumerate(probed_per_q):
+                for cid in probed:
+                    owner.setdefault(cid, qi)
+            resolved: Dict[int, np.ndarray] = {}
+            pending_regen: List[int] = []
+            missed = [False] * nq
+            for cid, qi in owner.items():
+                cl, lat = self.clusters[cid], lats[qi]
+                if cl.stored and cid in self.storage:
+                    embs = self.storage.get(cid)
+                    lat.l2_storage_load_s += self.cost.storage_load_latency(
+                        embs.nbytes)
+                    lat.n_storage_loads += 1
+                    resolved[cid] = embs
+                    continue
+                cached = self.cache.access(cid)
+                if cached is not None:
+                    lat.l2_cache_hit_s += self.cost.mem_load_latency(
+                        cached.nbytes, resident_bytes=self.memory_bytes())
+                    lat.n_cache_hits += 1
+                    resolved[cid] = cached
+                    continue
+                pending_regen.append(cid)
+            # Step 4b: ONE coalesced embed_fn call for every cache miss
+            if pending_regen:
+                texts_per = [self.get_chunks(self.clusters[c].ids.tolist())
+                             for c in pending_regen]
+                flat = [txt for ts in texts_per for txt in ts]
+                embs_all = np.ascontiguousarray(self.embed_fn(flat),
+                                                np.float32)
+                off = 0
+                for cid, ts in zip(pending_regen, texts_per):
+                    sub = embs_all[off:off + len(ts)]
+                    off += len(ts)
+                    chars = sum(len(txt) for txt in ts)
+                    gen_s = self.cost.embed_latency(chars)
+                    qi = owner[cid]
+                    lats[qi].l2_generate_s += gen_s
+                    lats[qi].n_generated += 1
+                    lats[qi].chars_embedded += chars
+                    missed[qi] = True
+                    self.clusters[cid].gen_latency_est = gen_s
+                    # copy: a view into embs_all would pin the whole batch's
+                    # embeddings in the cache and break its byte accounting
+                    self.cache.insert(
+                        cid, sub.copy(), gen_s,
+                        min_latency_threshold=self.threshold.threshold)
+                    resolved[cid] = sub
+            # Non-owners re-read the already-resident embeddings from DRAM
+            for qi, probed in enumerate(probed_per_q):
+                for cid in probed:
+                    if owner[cid] != qi:
+                        lats[qi].l2_mem_load_s += self.cost.mem_load_latency(
+                            resolved[cid].nbytes,
+                            resident_bytes=self.memory_bytes())
+                        lats[qi].n_shared_hits += 1
+            # Step 6: per-query fused top-k in the query's own probed order
+            for qi, probed in enumerate(probed_per_q):
+                if not probed:
+                    continue
+                embs = np.concatenate([resolved[c] for c in probed])
+                idmap = np.concatenate(
+                    [self.clusters[c].ids for c in probed])
+                vals, idx = topk_ip(embs, queries[qi:qi + 1], k)
+                vals, idx = np.asarray(vals), np.asarray(idx)
+                lats[qi].l2_search_s = self.cost.search_latency(
+                    len(embs), self.dim)
+                out_vals[qi] = vals[0]
+                out_ids[qi] = np.where(
+                    idx[0] >= 0, idmap[np.clip(idx[0], 0, len(idmap) - 1)],
+                    -1)
+        for lat in lats:                       # amortized batch wall time
+            lat.wall_s = t.elapsed / nq
+        # ---- Algorithm 3: adapt the threshold, once per query in order
+        # (queries that probed nothing did no level-2 work: no observation,
+        # matching the single-query early-return) ----
+        for qi in range(nq):
+            if not probed_per_q[qi]:
+                continue
+            new_thr = self.threshold.observe(missed[qi], lats[qi].retrieval_s)
+            if missed[qi]:
+                self.cache.drop_below_threshold(new_thr)
+        return out_ids, out_vals, lats
 
     def search(self, query_emb: np.ndarray, k: int, nprobe: int,
                query_chars: int = 0
                ) -> Tuple[np.ndarray, np.ndarray, LatencyBreakdown]:
+        """Single query — the degenerate batch of one."""
         query = np.atleast_2d(np.asarray(query_emb, np.float32))
         assert query.shape[0] == 1
-        lat = LatencyBreakdown()
-        with WallTimer() as t:
-            if query_chars:
-                lat.embed_query_s = self.cost.embed_latency(query_chars)
-            # Step 1: first-level centroid search
-            _, probed = topk_ip(self.centroids, query,
-                                min(nprobe, self.nlist))
-            probed = [int(c) for c in np.asarray(probed)[0]
-                      if c >= 0 and self.clusters[int(c)].active
-                      and self.clusters[int(c)].size > 0]
-            lat.n_clusters_probed = len(probed)
-            lat.centroid_search_s = (
-                self.cost.mem_load_latency(self.centroids.nbytes)
-                + self.cost.search_latency(self.nlist, self.dim))
-            # Steps 2-5: resolve each probed cluster's embeddings
-            cand_embs, cand_ids, missed = [], [], False
-            for cid in probed:
-                embs, miss = self._resolve_cluster(cid, lat)
-                missed |= miss
-                cand_embs.append(embs)
-                cand_ids.append(self.clusters[cid].ids)
-            if not cand_embs:
-                return (np.full((1, k), -1, np.int64),
-                        np.full((1, k), -np.inf, np.float32), lat)
-            # Step 6: second-level fused top-k
-            embs = np.concatenate(cand_embs)
-            idmap = np.concatenate(cand_ids)
-            vals, idx = topk_ip(embs, query, k)
-            vals, idx = np.asarray(vals), np.asarray(idx)
-            lat.l2_search_s = self.cost.search_latency(len(embs), self.dim)
-        lat.wall_s = t.elapsed
-        # ---- Algorithm 3: adapt the admission threshold ----
-        new_thr = self.threshold.observe(missed, lat.retrieval_s)
-        if missed:
-            self.cache.drop_below_threshold(new_thr)
-        ids = np.where(idx >= 0, idmap[np.clip(idx, 0, len(idmap) - 1)], -1)
-        return ids, vals, lat
+        ids, vals, lats = self.search_batch(
+            query, k, nprobe,
+            query_chars=[query_chars] if query_chars else None)
+        return ids, vals, lats[0]
 
     # ------------------------------------------------------------------
     # online updates (§5.4)
@@ -219,6 +310,7 @@ class EdgeRAGIndex:
         cl.ids = np.append(cl.ids, np.int64(chunk_id))
         cl.char_count += len(text)
         self._chunk_chars[int(chunk_id)] = len(text)
+        self._chunk_cluster[int(chunk_id)] = cid
         cl.gen_latency_est = self.cost.embed_latency(cl.char_count)
         self.cache.invalidate(cid)                      # stale embeddings
         if self.store_heavy and cl.gen_latency_est > self.slo_s:
@@ -228,28 +320,32 @@ class EdgeRAGIndex:
         return cid
 
     def remove(self, chunk_id: int) -> Optional[int]:
-        for cid, cl in enumerate(self.clusters):
-            if not cl.active:
-                continue
-            pos = np.where(cl.ids == chunk_id)[0]
-            if len(pos) == 0:
-                continue
-            cl.ids = np.delete(cl.ids, pos)
-            cl.char_count -= self._chunk_chars.pop(int(chunk_id), 0)
-            cl.gen_latency_est = self.cost.embed_latency(cl.char_count)
-            self.cache.invalidate(cid)
-            if cl.stored:
-                if cl.gen_latency_est <= self.slo_s:
-                    # cheap again: drop the stored copy entirely (async in
-                    # the paper; synchronous here)
-                    self.storage.delete(cid)
-                    cl.stored = False
-                else:
-                    self._restore_cluster(cid)
-            if 0 < cl.size < self.merge_min_size:
-                self._merge_cluster(cid)
-            return cid
-        return None
+        # O(1) lookup through the chunk->cluster map (kept consistent by
+        # build / insert / remove / split / merge)
+        cid = self._chunk_cluster.get(int(chunk_id))
+        if cid is None:
+            return None
+        cl = self.clusters[cid]
+        pos = np.where(cl.ids == chunk_id)[0]
+        if not cl.active or len(pos) == 0:      # defensive: stale map entry
+            self._chunk_cluster.pop(int(chunk_id), None)
+            return None
+        cl.ids = np.delete(cl.ids, pos)
+        cl.char_count -= self._chunk_chars.pop(int(chunk_id), 0)
+        del self._chunk_cluster[int(chunk_id)]
+        cl.gen_latency_est = self.cost.embed_latency(cl.char_count)
+        self.cache.invalidate(cid)
+        if cl.stored:
+            if cl.gen_latency_est <= self.slo_s:
+                # cheap again: drop the stored copy entirely (async in
+                # the paper; synchronous here)
+                self.storage.delete(cid)
+                cl.stored = False
+            else:
+                self._restore_cluster(cid)
+        if 0 < cl.size < self.merge_min_size:
+            self._merge_cluster(cid)
+        return cid
 
     # ---- maintenance helpers ----
     def _regen_embeddings(self, cid: int) -> np.ndarray:
@@ -295,6 +391,8 @@ class EdgeRAGIndex:
                 self.clusters.append(newcl)
                 self.centroids = np.concatenate(
                     [self.centroids, cents[1:2]])
+            for i in newcl.ids:
+                self._chunk_cluster[int(i)] = slot
 
     def _merge_cluster(self, cid: int):
         """Merge an undersized cluster into its nearest active neighbor."""
@@ -314,6 +412,8 @@ class EdgeRAGIndex:
         other = self.clusters[tgt]
         other.ids = np.concatenate([other.ids, cl.ids])
         other.char_count += cl.char_count
+        for i in cl.ids:
+            self._chunk_cluster[int(i)] = tgt
         other.gen_latency_est = self.cost.embed_latency(other.char_count)
         self.cache.invalidate(tgt)
         self.cache.invalidate(cid)

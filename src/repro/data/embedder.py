@@ -2,13 +2,19 @@
 (unit-normalized), plus ``dim``.
 
 * :class:`HashingEmbedder` — deterministic char-3-gram random projection.
-  Fast and similarity-preserving enough for index unit tests.
+  Fast and similarity-preserving enough for index unit tests.  Trigram
+  hashing runs as a vectorized numpy bulk path (FNV-1a over byte windows),
+  so one call over many texts is one feature matmul, not a Python loop per
+  character.
 * :class:`ModelEmbedder` — the real thing: wraps the gte-base JAX model
-  (``repro.models.encode``) behind the tokenizer.  Used by the e2e examples.
+  (``repro.models.encode``) behind the tokenizer.  Batches are padded to
+  power-of-two row counts so the jitted encode compiles once per bucket and
+  a coalesced regeneration call is a single device program.
 * :class:`TableEmbedder` — oracle for synthetic corpora: chunk texts carry a
   ``doc-<id>`` prefix that resolves to a precomputed vector, so regeneration
   at retrieval time reproduces indexing-time embeddings exactly (the paper's
-  determinism assumption for online generation).
+  determinism assumption for online generation).  Non-oracle rows fall back
+  to one batched :class:`HashingEmbedder` call.
 """
 from __future__ import annotations
 
@@ -18,6 +24,9 @@ from typing import Dict, List, Sequence
 import numpy as np
 
 from repro.data.tokenizer import HashingTokenizer, _fnv1a
+
+_FNV_BASIS = np.uint64(0xCBF29CE484222325)
+_FNV_PRIME = np.uint64(0x100000001B3)
 
 
 class HashingEmbedder:
@@ -30,12 +39,36 @@ class HashingEmbedder:
         self.calls = 0
         self.chars_embedded = 0
 
-    def _features(self, text: str) -> np.ndarray:
-        f = np.zeros(self.n_features, np.float32)
+    def _trigram_hashes(self, text: str) -> np.ndarray:
+        """FNV-1a hash of every char trigram, vectorized over byte windows.
+
+        Equivalent to hashing ``text[i:i+3]`` per position when the text is
+        pure ASCII (one byte per char); multibyte texts take the exact
+        per-character path.
+        """
         t = text.lower()
-        for i in range(len(t) - 2):
-            f[_fnv1a(t[i:i + 3]) % self.n_features] += 1.0
-        return f
+        data = t.encode("utf-8")
+        if len(data) != len(t):          # non-ASCII: exact per-char fallback
+            return np.asarray(
+                [_fnv1a(t[i:i + 3]) for i in range(len(t) - 2)], np.uint64)
+        arr = np.frombuffer(data, np.uint8).astype(np.uint64)
+        n = len(arr) - 2
+        if n <= 0:
+            return np.zeros(0, np.uint64)
+        with np.errstate(over="ignore"):
+            h = np.full(n, _FNV_BASIS, np.uint64)
+            for j in range(3):
+                h ^= arr[j:j + n]
+                h *= _FNV_PRIME          # wraps mod 2^64 like _fnv1a
+        return h
+
+    def _features(self, text: str) -> np.ndarray:
+        h = self._trigram_hashes(text)
+        if len(h) == 0:
+            return np.zeros(self.n_features, np.float32)
+        return np.bincount(
+            (h % np.uint64(self.n_features)).astype(np.int64),
+            minlength=self.n_features).astype(np.float32)
 
     def embed(self, texts: Sequence[str]) -> np.ndarray:
         self.calls += 1
@@ -62,12 +95,15 @@ class TableEmbedder:
         self.calls += 1
         self.chars_embedded += sum(len(t) for t in texts)
         out = np.empty((len(texts), self.dim), np.float32)
+        misses: List[int] = []
         for i, t in enumerate(texts):
             if t.startswith("doc-"):
                 did = int(t[4:t.index(" ")] if " " in t else t[4:])
                 out[i] = self.table[did]
             else:
-                out[i] = self._fallback.embed([t])[0]
+                misses.append(i)
+        if misses:                       # one batched fallback call
+            out[misses] = self._fallback.embed([texts[i] for i in misses])
         return out
 
     __call__ = embed
@@ -103,9 +139,20 @@ class ModelEmbedder:
             p, self.cfg, {"tokens": toks, "attn_mask": mask}))
 
     def embed(self, texts: Sequence[str]) -> np.ndarray:
+        """Batched encode: rows are padded to the next power-of-two batch
+        size so the jitted program compiles once per bucket — a coalesced
+        regeneration over many clusters is ONE device program."""
         self.calls += 1
         self.chars_embedded += sum(len(t) for t in texts)
         toks, mask = self.tokenizer.encode_batch(list(texts), self.max_len)
-        return np.asarray(self._jit_encode(self.params, toks, mask))
+        b = toks.shape[0]
+        bucket = 1 << max(0, (b - 1).bit_length())
+        if bucket > b:                   # pad rows; padded rows sliced off
+            pad = ((0, bucket - b), (0, 0))
+            toks = np.pad(toks, pad)
+            mask = np.pad(mask, pad)
+            mask[b:, 0] = 1              # keep padded rows mask-valid
+        out = np.asarray(self._jit_encode(self.params, toks, mask))
+        return out[:b]
 
     __call__ = embed

@@ -3,18 +3,25 @@
 The compute hot-spot EdgeRAG inherits from FAISS is the second-level search:
 score every candidate embedding in the probed clusters against the query and
 keep the best k.  FAISS does a CPU linear scan; the TPU-native formulation
-streams candidate rows HBM→VMEM exactly once and fuses the MXU distance
-matmul with an on-chip running top-k, so no (N,) score vector ever hits HBM.
+streams candidate rows HBM→VMEM and fuses the MXU distance matmul with an
+on-chip running top-k, so no (N,) score vector ever hits HBM.
 
-Grid: (Q, N // BLOCK_N) — the N axis is the minor (sequential) grid dim, so
-the (k,) running-best VMEM scratch persists across blocks of one query.
-Top-k maintenance is k iterations of (argmax, mask) over the (BLOCK_N + k,)
-candidate vector — k is small (≤ 128), pure VPU work.
+Multi-query tiling: queries are processed in blocks of ``block_q`` rows with
+grid (Q // BLOCK_Q, N // BLOCK_N) — the N axis is the minor (sequential)
+grid dim, so the (BLOCK_Q, k) running-best VMEM scratch persists across
+candidate blocks of one query block.  Each candidate block is therefore
+streamed from HBM once per *query block* instead of once per query: a batch
+of B queries costs ceil(B / BLOCK_Q) passes over the candidates, not B.
+
+Top-k maintenance is k iterations of a row-vectorized (argmax, mask) over
+the (BLOCK_Q, k + BLOCK_N) candidate matrix — all BLOCK_Q rows advance per
+iteration (pure VPU work; k is small, ≤ 128).  The single-query path is the
+degenerate case BLOCK_Q = 1.
 
 BlockSpec tiling: emb block (BLOCK_N, D) f32 in VMEM (default 512×768×4 ≈
-1.5 MiB), query row (1, D), outputs (1, k).  D stays whole: dim 768 =
-6×128 lanes, MXU-aligned.  The true candidate count rides in SMEM so padded
-rows can be masked.
+1.5 MiB), query block (BLOCK_Q, D), outputs (BLOCK_Q, k).  D stays whole:
+dim 768 = 6×128 lanes, MXU-aligned.  The true candidate count rides in SMEM
+so padded rows can be masked; padded query rows are sliced off outside.
 """
 from __future__ import annotations
 
@@ -28,83 +35,111 @@ import jax.experimental.pallas.tpu as pltpu
 NEG_INF = -1e30
 
 
-def _topk_merge(scores, base_idx, run_vals, run_idx, k: int):
-    """Merge a block's scores (B,) into the running (k,) best."""
-    cand_vals = jnp.concatenate([run_vals, scores])          # (k + B,)
-    cand_idx = jnp.concatenate([run_idx, base_idx])
+def _topk_merge_rows(scores, base_idx, run_vals, run_idx, k: int):
+    """Merge a block's scores (BQ, BN) into the running (BQ, k) best.
+
+    Vectorized across the BQ query rows: each of the k iterations does one
+    row-wise argmax over the (BQ, k + BN) candidate matrix and masks the
+    selected column per row.  Ties break toward the lower column index —
+    running entries (already sorted, earlier N blocks) win over new
+    candidates, matching ``jax.lax.top_k`` order.
+    """
+    bq = scores.shape[0]
+    cand_vals = jnp.concatenate([run_vals, scores], axis=1)   # (BQ, k + BN)
+    cand_idx = jnp.concatenate(
+        [run_idx, jnp.broadcast_to(base_idx[None], scores.shape)], axis=1)
+    col = jax.lax.broadcasted_iota(jnp.int32, cand_vals.shape, 1)
 
     def body(i, carry):
         vals, out_v, out_i = carry
-        j = jnp.argmax(vals)
-        out_v = out_v.at[i].set(vals[j])
-        out_i = out_i.at[i].set(cand_idx[j])
-        vals = vals.at[j].set(NEG_INF)
+        j = jnp.argmax(vals, axis=1)                          # (BQ,)
+        best_v = jnp.take_along_axis(vals, j[:, None], axis=1)
+        best_i = jnp.take_along_axis(cand_idx, j[:, None], axis=1)
+        out_v = jax.lax.dynamic_update_slice(out_v, best_v, (0, i))
+        out_i = jax.lax.dynamic_update_slice(out_i, best_i, (0, i))
+        vals = jnp.where(col == j[:, None], NEG_INF, vals)
         return vals, out_v, out_i
 
     init = (cand_vals,
-            jnp.full((k,), NEG_INF, jnp.float32),
-            jnp.full((k,), jnp.int32(2**30), jnp.int32))
+            jnp.full((bq, k), NEG_INF, jnp.float32),
+            jnp.full((bq, k), jnp.int32(2**30), jnp.int32))
     _, out_v, out_i = jax.lax.fori_loop(0, k, body, init)
     return out_v, out_i
 
 
 def _kernel(valid_ref, emb_ref, q_ref, out_v_ref, out_i_ref,
-            run_v, run_i, *, k: int, block_n: int):
+            run_v, run_i, *, k: int, block_n: int, block_q: int):
     nb = pl.program_id(1)
 
     @pl.when(nb == 0)
     def _init():
-        run_v[...] = jnp.full((k,), NEG_INF, jnp.float32)
-        run_i[...] = jnp.full((k,), jnp.int32(2**30), jnp.int32)
+        run_v[...] = jnp.full((block_q, k), NEG_INF, jnp.float32)
+        run_i[...] = jnp.full((block_q, k), jnp.int32(2**30), jnp.int32)
 
-    emb = emb_ref[...].astype(jnp.float32)                   # (B, D)
-    q = q_ref[...].astype(jnp.float32)                       # (1, D)
-    scores = (emb @ q.T)[:, 0]                               # (B,) via MXU
+    emb = emb_ref[...].astype(jnp.float32)                   # (BN, D)
+    q = q_ref[...].astype(jnp.float32)                       # (BQ, D)
+    scores = jax.lax.dot_general(                            # (BQ, BN) via MXU
+        q, emb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
     base = nb * block_n + jax.lax.iota(jnp.int32, block_n)
-    scores = jnp.where(base < valid_ref[0], scores, NEG_INF)
-    v, i = _topk_merge(scores, base, run_v[...], run_i[...], k)
+    scores = jnp.where((base < valid_ref[0])[None], scores, NEG_INF)
+    v, i = _topk_merge_rows(scores, base, run_v[...], run_i[...], k)
     run_v[...] = v
     run_i[...] = i
 
     @pl.when(nb == pl.num_programs(1) - 1)
     def _done():
-        out_v_ref[...] = run_v[...][None]
-        out_i_ref[...] = run_i[...][None]
+        out_v_ref[...] = run_v[...]
+        out_i_ref[...] = run_i[...]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "block_q", "interpret"))
 def topk_ip_pallas(embs, queries, k: int, *, block_n: int = 512,
-                   interpret: bool = True):
-    """embs (N, D) f32, queries (Q, D) f32 -> (scores (Q,k), idx (Q,k))."""
+                   block_q: int = 8, interpret: bool = True):
+    """embs (N, D) f32, queries (Q, D) f32 -> (scores (Q,k), idx (Q,k)).
+
+    Queries are tiled in blocks of ``block_q`` (clamped to Q); each
+    candidate block is read once per query block.  Q and N are padded to
+    block multiples internally; padded outputs are sliced off.
+    """
     n, d = embs.shape
     q = queries.shape[0]
+    block_q = max(1, min(block_q, q))
     n_pad = (-n) % block_n
     if n_pad:
         embs = jnp.pad(embs, ((0, n_pad), (0, 0)))
+    q_pad = (-q) % block_q
+    if q_pad:
+        queries = jnp.pad(queries, ((0, q_pad), (0, 0)))
     n_blocks = embs.shape[0] // block_n
+    q_blocks = queries.shape[0] // block_q
     valid = jnp.array([n], jnp.int32)
 
-    kernel = functools.partial(_kernel, k=k, block_n=block_n)
+    kernel = functools.partial(_kernel, k=k, block_n=block_n,
+                               block_q=block_q)
     out_v, out_i = pl.pallas_call(
         kernel,
-        grid=(q, n_blocks),
+        grid=(q_blocks, n_blocks),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((block_n, d), lambda qi, ni: (ni, 0)),
-            pl.BlockSpec((1, d), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q, d), lambda qi, ni: (qi, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, k), lambda qi, ni: (qi, 0)),
-            pl.BlockSpec((1, k), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((q, k), jnp.float32),
-            jax.ShapeDtypeStruct((q, k), jnp.int32),
+            jax.ShapeDtypeStruct((queries.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((queries.shape[0], k), jnp.int32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((k,), jnp.float32),
-            pltpu.VMEM((k,), jnp.int32),
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
         ],
         interpret=interpret,
     )(valid, embs, queries)
+    if q_pad:
+        out_v, out_i = out_v[:q], out_i[:q]
     return out_v, out_i

@@ -11,6 +11,8 @@ from repro.models import model as M
 from repro.models.cache import init_cache
 from repro.train.train_step import make_train_step, train_state_init
 
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -9,6 +9,8 @@ from repro.models import model as M
 from repro.models.cache import init_cache
 from repro.serving.batching import ContinuousBatcher
 
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(3)
 
 

@@ -35,6 +35,18 @@ def test_ivf_topk_matches_ref(n, d, q, k):
     assert (np.asarray(pi) == np.asarray(ri)).all()
 
 
+@pytest.mark.parametrize("q,block_q", [(1, 8), (3, 2), (16, 8), (9, 4)])
+def test_ivf_topk_query_blocking(q, block_q):
+    """Multi-query tiling: padded and exact query blocks match the ref."""
+    embs = _rand((257, 64))
+    qs = _rand((q, 64))
+    pv, pi = topk_ip_pallas(embs, qs, 11, block_n=64, block_q=block_q,
+                            interpret=True)
+    rv, ri = topk_ip_ref(embs, qs, 11)
+    np.testing.assert_allclose(np.asarray(pv), np.asarray(rv), atol=2e-4)
+    assert (np.asarray(pi) == np.asarray(ri)).all()
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_ivf_topk_dtypes(dtype):
     embs = _rand((300, 128), dtype)

@@ -1,6 +1,9 @@
 """Hypothesis: EdgeRAG online-maintenance invariants under random
 insert/remove sequences (§5.4)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import EdgeCostModel, EdgeRAGIndex

@@ -16,6 +16,8 @@ from repro.serving.scheduler import RequestScheduler
 from repro.serving.simulator import EdgeSimulator
 from repro.train.checkpoint import load_checkpoint, save_checkpoint
 from repro.train.optimizer import adamw_init, adamw_update, cosine_schedule
+
+pytestmark = pytest.mark.slow
 from repro.train.train_step import make_train_step, train_state_init
 
 

@@ -7,6 +7,8 @@ from repro.core import EdgeCostModel, EdgeRAGIndex, FlatIndex, IVFIndex
 from repro.data import HashingEmbedder, chunk_text, generate_dataset
 from repro.data.synthetic import BEIR_SPECS, scaled_beir
 
+pytestmark = pytest.mark.slow
+
 
 def test_full_pipeline_from_raw_text():
     """index raw documents (chunking + real embedder), retrieve by text."""
