@@ -1,0 +1,129 @@
+"""Quantized storage tiers: recall@10 + edge TTFT per storage codec.
+
+Builds the same corpus under each storage codec (fp32 / fp16 / int8) with a
+tiny SLO so (nearly) every cluster lands in selective storage, then measures
+against the fp32 baseline:
+
+  * recall@10 vs the corpus's ground-truth topics, and the ratio to fp32
+    (acceptance: >= 0.95);
+  * retrieved-id overlap with the fp32 tier;
+  * storage bytes + reduction factor (fp16 exactly 2x; int8 ~3.9x — per-row
+    fp16 scales cost 2 B against 4·d B of fp32 rows, so 4x is the asymptote);
+  * mean edge TTFT (retrieval + prefill via the cost model) — quantized
+    loads stream fewer bytes off the SD card, minus a dequant term.
+
+The cost model is pinned to the paper's bandwidth-constrained regime (slow
+SD-card sequential reads under memory pressure, few large clusters, a short
+prompt) so the byte-proportional part of the storage load — the term the
+codecs shrink — dominates the per-cluster seek and the prefill; at the
+default calibration the seek constant hides the reduction at this corpus
+scale.
+
+Appends the grid to the BENCH trajectory as ``BENCH_quantized_tiers.json``.
+
+``python -m benchmarks.quantized_tiers [--out PATH] [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import EdgeCostModel, EdgeRAGIndex
+from repro.core.storage import CODECS
+from repro.data import generate_dataset
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_quantized_tiers.json")
+
+DIM = 64
+K = 10
+NPROBE = 6
+PROMPT_TOKENS = 32
+
+
+def run(out_path: str = DEFAULT_OUT, quick: bool = False) -> Dict:
+    n_records = 1200 if quick else 3000
+    nq = 48 if quick else 128
+    nlist = max(8, n_records // 250)          # few, heavy clusters
+    ds = generate_dataset(n_records=n_records, dim=DIM,
+                          n_topics=max(16, n_records // 60),
+                          n_queries=nq, seed=9)
+    # SD card under memory pressure (paper §3.2): bandwidth-bound reads
+    cost = EdgeCostModel(storage_seq_bw_bytes_per_sec=2e6,
+                         storage_seek_s=0.002)
+    results: Dict = {"n_records": n_records, "n_queries": nq,
+                     "nlist": nlist, "k": K, "codecs": {}}
+    ids_by_codec: Dict[str, np.ndarray] = {}
+    for codec in CODECS:
+        # tiny SLO + no cache: every search exercises the storage tier
+        er = EdgeRAGIndex(DIM, ds.embedder, ds.get_chunks, cost,
+                          slo_s=1e-6, store_heavy=True, cache_bytes=0,
+                          storage_codec=codec)
+        er.build(ds.chunk_ids, ds.texts, nlist=nlist,
+                 embeddings=ds.embeddings, seed=1)
+        # per-query searches: each query pays its own storage loads (the
+        # single-user serving scenario; one big batch would dedup them away)
+        ids_rows, lats = [], []
+        for qi in range(nq):
+            row, _, lat = er.search(ds.query_embs[qi], K, NPROBE)
+            ids_rows.append(row[0])
+            lats.append(lat)
+        ids = np.stack(ids_rows)
+        ids_by_codec[codec] = ids
+        hits = sum(len(set(ids[qi].tolist()) & ds.relevant(qi))
+                   for qi in range(nq))
+        recall = hits / (nq * K)
+        ttft = float(np.mean([l.retrieval_s
+                              + cost.prefill_latency(PROMPT_TOKENS)
+                              for l in lats]))
+        st = er.stats()
+        assert st["stored_clusters"] == st["active_clusters"]
+        results["codecs"][codec] = {
+            "recall_at10": recall,
+            "ttft_edge_s": ttft,
+            "storage_bytes": st["storage_bytes"],
+            "storage_fp32_bytes": st["storage_fp32_bytes"],
+            "reduction": st["storage_fp32_bytes"] / st["storage_bytes"],
+            "n_storage_loads": sum(l.n_storage_loads for l in lats),
+        }
+    fp32 = results["codecs"]["fp32"]
+    for codec in CODECS:
+        cell = results["codecs"][codec]
+        cell["recall_ratio_vs_fp32"] = (cell["recall_at10"]
+                                        / max(fp32["recall_at10"], 1e-12))
+        cell["id_overlap_vs_fp32"] = float(np.mean([
+            len(set(ids_by_codec[codec][qi].tolist())
+                & set(ids_by_codec["fp32"][qi].tolist())) / K
+            for qi in range(nq)]))
+        cell["ttft_speedup_vs_fp32"] = fp32["ttft_edge_s"] / cell["ttft_edge_s"]
+        emit(f"quantized_tiers.{codec}", cell["ttft_edge_s"] * 1e6,
+             f"recall@10={cell['recall_at10']:.3f} "
+             f"ratio={cell['recall_ratio_vs_fp32']:.3f} "
+             f"reduction={cell['reduction']:.2f}x "
+             f"ttft_speedup={cell['ttft_speedup_vs_fp32']:.2f}x")
+    ok = all(results["codecs"][c]["recall_ratio_vs_fp32"] >= 0.95
+             for c in ("fp16", "int8"))
+    results["recall_criterion_met"] = ok
+    print(f"# recall@10 >= 0.95 of fp32 for fp16+int8: "
+          f"{'PASS' if ok else 'FAIL'}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {out_path}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(args.out, args.quick)
+
+
+if __name__ == "__main__":
+    main()

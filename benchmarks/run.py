@@ -9,8 +9,8 @@ import traceback
 
 from benchmarks import (batched_retrieval, embed_gen_rate,
                         gen_cost_distribution, generation_quality, kernels,
-                        latency_breakdown, retrieval_quality, roofline_table,
-                        tail_latency, threshold_sweep, ttft)
+                        latency_breakdown, quantized_tiers, retrieval_quality,
+                        roofline_table, tail_latency, threshold_sweep, ttft)
 
 SUITES = {
     "fig3_latency_breakdown": latency_breakdown.run,
@@ -27,6 +27,9 @@ SUITES = {
     # (batch-1 vs batched QPS, dedup rate, embed calls) so the perf
     # trajectory is tracked across PRs
     "batched_retrieval": batched_retrieval.run,
+    # storage codec sweep; writes BENCH_quantized_tiers.json (recall@10 +
+    # edge TTFT + byte reduction per fp32/fp16/int8 storage tier)
+    "quantized_tiers": quantized_tiers.run,
 }
 
 

@@ -1,14 +1,54 @@
 #!/usr/bin/env bash
 # Minimal CI: fast lane by default (seconds, not minutes); pass --full for
-# the whole tier-1 suite (~5 min).
-#   scripts/ci.sh           -> pytest -m "not slow"
-#   scripts/ci.sh --full    -> full suite
+# the whole tier-1 suite (~5 min); pass bench-smoke for a tiny-scale run of
+# the perf-trajectory benchmarks plus a schema check on their JSON outputs
+# (so the perf plumbing can't silently rot).
+#   scripts/ci.sh              -> pytest -m "not slow"
+#   scripts/ci.sh --full       -> full suite
+#   scripts/ci.sh bench-smoke  -> quick benchmarks + BENCH_*.json key check
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--full" ]]; then
     python -m pytest -q
-else
+elif [[ "${1:-}" == "bench-smoke" ]]; then
+    out="$(mktemp -d)"
+    trap 'rm -rf "$out"' EXIT
+    python -m benchmarks.batched_retrieval --quick \
+        --out "$out/BENCH_retrieval.json"
+    python -m benchmarks.quantized_tiers --quick \
+        --out "$out/BENCH_quantized_tiers.json"
+    python - "$out" <<'PY'
+import json, os, sys
+
+out = sys.argv[1]
+
+r = json.load(open(os.path.join(out, "BENCH_retrieval.json")))
+for key in ("n_records", "n_queries", "nlist", "k", "configs",
+            "batch16_speedup_np8"):
+    assert key in r, f"BENCH_retrieval.json missing key: {key}"
+assert r["configs"], "BENCH_retrieval.json has no configs"
+for cfg, cells in r["configs"].items():
+    assert cells, f"config {cfg} has no cells"
+    for cell in cells:
+        for key in ("nprobe", "batch", "mode", "qps", "speedup",
+                    "dedup_rate", "embed_calls"):
+            assert key in cell, f"{cfg} cell missing key: {key}"
+
+q = json.load(open(os.path.join(out, "BENCH_quantized_tiers.json")))
+for codec in ("fp32", "fp16", "int8"):
+    cell = q["codecs"][codec]
+    for key in ("recall_at10", "ttft_edge_s", "storage_bytes",
+                "reduction", "recall_ratio_vs_fp32"):
+        assert key in cell, f"codec {codec} missing key: {key}"
+assert q["recall_criterion_met"], "quantized recall fell below 0.95 of fp32"
+
+print("bench-smoke OK: BENCH JSON schemas intact")
+PY
+elif [[ -z "${1:-}" ]]; then
     python -m pytest -q -m "not slow"
+else
+    echo "unknown lane: $1 (expected: no arg, --full, or bench-smoke)" >&2
+    exit 2
 fi

@@ -44,6 +44,8 @@ class EdgeCostModel:
     model_reserved_bytes: float = 6.0e9          # 5.4 GB LLM bf16 + runtime
     # vector math throughput for similarity search (CPU+GPU)
     search_flops_per_sec: float = 2.0e11
+    # int8/fp16 storage codecs dequantize on load (widen + scale per value)
+    dequant_values_per_sec: float = 2.0e9
     # LLM prefill (Sheared-LLaMA-2.7B on Orin): tokens/s
     prefill_tokens_per_sec: float = 400.0
 
@@ -72,6 +74,10 @@ class EdgeCostModel:
     def search_latency(self, n_vectors: int, dim: int) -> float:
         return 2.0 * n_vectors * dim / self.search_flops_per_sec
 
+    def dequant_latency(self, n_values: int) -> float:
+        """Decode cost of a quantized storage codec (zero work for fp32)."""
+        return n_values / self.dequant_values_per_sec
+
     def prefill_latency(self, n_tokens: int) -> float:
         return n_tokens / self.prefill_tokens_per_sec
 
@@ -83,6 +89,7 @@ class LatencyBreakdown:
     centroid_search_s: float = 0.0
     l2_generate_s: float = 0.0
     l2_storage_load_s: float = 0.0
+    l2_dequant_s: float = 0.0   # codec decode — compute, not storage I/O
     l2_cache_hit_s: float = 0.0
     l2_mem_load_s: float = 0.0
     l2_search_s: float = 0.0
@@ -98,7 +105,8 @@ class LatencyBreakdown:
     def retrieval_s(self) -> float:
         return (self.embed_query_s + self.centroid_search_s
                 + self.l2_generate_s + self.l2_storage_load_s
-                + self.l2_cache_hit_s + self.l2_mem_load_s + self.l2_search_s)
+                + self.l2_dequant_s + self.l2_cache_hit_s
+                + self.l2_mem_load_s + self.l2_search_s)
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self) | {"retrieval_s": self.retrieval_s}

@@ -45,6 +45,21 @@ a query counts as a miss iff it owns at least one regenerated cluster.
 ``wall_s`` is the batch wall time amortized uniformly over the queries.
 Single-query ``search`` is a thin wrapper over a batch of one — the
 degenerate case reproduces the seed semantics exactly.
+
+TIERED RESOLUTION (core/resolver.py): retrieval runs an explicit
+probe → PLAN → EXECUTE → score pipeline.  :meth:`EdgeRAGIndex.plan_batch`
+(or ``search_batch`` internally) builds a
+:class:`~repro.core.resolver.ResolutionPlan` — the batch's unique clusters,
+each one's owner query and chosen tier (storage / cache / regen), and the
+coalesced regeneration groups — and the shared
+:class:`~repro.core.resolver.ClusterResolver` executes it: a batched
+``get_many`` storage load under the configured codec (fp32 / fp16 / int8,
+``storage_codec=``), cache lookups, one ``embed_fn`` call per regen group.
+A precomputed plan can be handed back to ``search_batch(plan=...)`` so the
+serving engine can prefetch the plan's storage loads before prompt
+assembly.  ``search_batch(..., mesh=...)`` routes the second-level scoring
+of each query's resolved slab through ``sharded_topk_ip`` (pod-sharded
+mode, core/sharded_retrieval.py); ids match the unsharded path.
 """
 from __future__ import annotations
 
@@ -57,6 +72,7 @@ from repro.core.cache_policy import (CostAwareLFUCache,
                                      MinLatencyThresholdController)
 from repro.core.costs import EdgeCostModel, LatencyBreakdown, WallTimer
 from repro.core.kmeans import kmeans
+from repro.core.resolver import ClusterResolver, ResolutionPlan
 from repro.core.storage import StorageBackend
 from repro.kernels.ivf_topk.ops import topk_ip
 
@@ -84,6 +100,8 @@ class EdgeRAGIndex:
                  store_heavy: bool = True,
                  cache_bytes: Optional[int] = None,
                  storage_mode: str = "memory",
+                 storage_codec: str = "fp32",
+                 storage_root: Optional[str] = None,
                  split_max_chars: int = 200_000,
                  merge_min_size: int = 2):
         self.dim = dim
@@ -96,7 +114,9 @@ class EdgeRAGIndex:
             cache_bytes = int(0.07 * self.cost.device_memory_bytes)  # §6.3.4
         self.cache = CostAwareLFUCache(cache_bytes)
         self.threshold = MinLatencyThresholdController()
-        self.storage = StorageBackend(storage_mode)
+        self.storage = StorageBackend(storage_mode, root=storage_root,
+                                      codec=storage_codec)
+        self.resolver = ClusterResolver(self)
         self.centroids: Optional[np.ndarray] = None
         self.clusters: List[EdgeCluster] = []
         self.split_max_chars = split_max_chars
@@ -116,8 +136,16 @@ class EdgeRAGIndex:
         if embeddings is None:
             embeddings = self.embed_fn(list(texts))
         embeddings = np.ascontiguousarray(embeddings, np.float32)
-        self._chunk_chars.update(
-            {int(i): len(t) for i, t in zip(chunk_ids, texts)})
+        # rebuild: drop every trace of the previous corpus — stored
+        # clusters, cached embeddings, the adapted Alg. 3 threshold (learned
+        # from the old latency distribution), and the char table
+        self.storage.clear()
+        self.cache = CostAwareLFUCache(self.cache.capacity_bytes,
+                                       self.cache.decay_factor)
+        self.threshold = MinLatencyThresholdController(
+            self.threshold.step_s, self.threshold.alpha)
+        self._chunk_chars = {int(i): len(t)
+                             for i, t in zip(chunk_ids, texts)}
         self.centroids, assign = kmeans(embeddings, nlist,
                                         iters=kmeans_iters, seed=seed)
         self.clusters = []
@@ -157,19 +185,50 @@ class EdgeRAGIndex:
         return sum(c.size for c in self.clusters if c.active)
 
     # ------------------------------------------------------------------
-    # retrieval (Fig. 9)
+    # retrieval (Fig. 9): probe → plan → execute → score
     # ------------------------------------------------------------------
+    def _probe(self, queries: np.ndarray, nprobe: int) -> List[List[int]]:
+        """ONE fused centroid top-k over the batch; per query, the probed
+        active non-empty clusters in probe order."""
+        _, probed_all = topk_ip(self.centroids, queries,
+                                min(nprobe, self.nlist))
+        probed_all = np.asarray(probed_all)
+        return [[int(c) for c in probed_all[qi]
+                 if c >= 0 and self.clusters[int(c)].active
+                 and self.clusters[int(c)].size > 0]
+                for qi in range(queries.shape[0])]
+
+    def plan_batch(self, query_embs: np.ndarray, nprobe: int, *,
+                   prefetch_storage: bool = False) -> ResolutionPlan:
+        """Probe + plan without executing — the serving engine uses this to
+        issue the plan's storage loads before prompt assembly.  Hand the
+        plan to ``search_batch(plan=...)`` to execute it (the plan-time
+        cache lookups already happened; they are not repeated)."""
+        queries = np.atleast_2d(np.asarray(query_embs, np.float32))
+        plan = self.resolver.plan(self._probe(queries, nprobe))
+        if prefetch_storage:
+            self.resolver.prefetch(plan)
+        return plan
+
     def search_batch(self, query_embs: np.ndarray, k: int, nprobe: int,
-                     query_chars: Optional[Sequence[int]] = None
+                     query_chars: Optional[Sequence[int]] = None,
+                     *, plan: Optional[ResolutionPlan] = None,
+                     mesh=None, shard_axis: str = "data"
                      ) -> Tuple[np.ndarray, np.ndarray,
                                 List[LatencyBreakdown]]:
         """Batched retrieval fast path (see module docstring).
 
         ``query_embs`` (Q, d); returns (ids (Q, k), scores (Q, k), one
         :class:`LatencyBreakdown` per query).  Each unique probed cluster is
-        resolved once for the whole batch and all cache-miss regenerations
-        coalesce into a single ``embed_fn`` call; per-query (ids, scores)
-        are bit-identical to a sequential per-query ``search`` loop.
+        resolved once for the whole batch through the tiered
+        :class:`ClusterResolver` and all cache-miss regenerations coalesce
+        into a single ``embed_fn`` call; per-query (ids, scores) are
+        bit-identical to a sequential per-query ``search`` loop.
+
+        ``plan``: a precomputed :class:`ResolutionPlan` from
+        :meth:`plan_batch` (same queries / nprobe) — skips re-probing and
+        re-planning.  ``mesh``: route each query's second-level scoring
+        through ``sharded_topk_ip`` over the mesh's ``shard_axis``.
         """
         queries = np.atleast_2d(np.asarray(query_embs, np.float32))
         nq = queries.shape[0]
@@ -183,78 +242,32 @@ class EdgeRAGIndex:
                 for lat, qc in zip(lats, query_chars):
                     if qc:
                         lat.embed_query_s = self.cost.embed_latency(int(qc))
-            # Step 1: ONE fused centroid top-k over the whole batch
-            _, probed_all = topk_ip(self.centroids, queries,
-                                    min(nprobe, self.nlist))
-            probed_all = np.asarray(probed_all)
+            # Step 1: probe (ONE fused centroid top-k) + plan the tiers
+            if plan is None:
+                plan = self.resolver.plan(self._probe(queries, nprobe))
+            probed_per_q = plan.probed_per_q
+            assert len(probed_per_q) == nq, \
+                f"plan covers {len(probed_per_q)} queries, got {nq}"
             centroid_s = (self.cost.mem_load_latency(self.centroids.nbytes)
                           + self.cost.search_latency(self.nlist, self.dim))
-            probed_per_q: List[List[int]] = []
             for qi in range(nq):
-                probed = [int(c) for c in probed_all[qi]
-                          if c >= 0 and self.clusters[int(c)].active
-                          and self.clusters[int(c)].size > 0]
-                lats[qi].n_clusters_probed = len(probed)
+                lats[qi].n_clusters_probed = len(probed_per_q[qi])
                 lats[qi].centroid_search_s = centroid_s
-                probed_per_q.append(probed)
-            # Steps 2-5: union-dedup; resolve each unique cluster ONCE.
-            # Owner = first query in batch order that probed the cluster.
-            owner: Dict[int, int] = {}
-            for qi, probed in enumerate(probed_per_q):
-                for cid in probed:
-                    owner.setdefault(cid, qi)
-            resolved: Dict[int, np.ndarray] = {}
-            pending_regen: List[int] = []
+            # Steps 2-5: execute the plan — batched storage get_many under
+            # the configured codec, cache payloads, coalesced regeneration.
+            # Owners are charged the single-query formulas.
+            owner = plan.owner
             missed = [False] * nq
-            for cid, qi in owner.items():
-                cl, lat = self.clusters[cid], lats[qi]
-                if cl.stored and cid in self.storage:
-                    embs = self.storage.get(cid)
-                    lat.l2_storage_load_s += self.cost.storage_load_latency(
-                        embs.nbytes)
-                    lat.n_storage_loads += 1
-                    resolved[cid] = embs
-                    continue
-                cached = self.cache.access(cid)
-                if cached is not None:
-                    lat.l2_cache_hit_s += self.cost.mem_load_latency(
-                        cached.nbytes, resident_bytes=self.memory_bytes())
-                    lat.n_cache_hits += 1
-                    resolved[cid] = cached
-                    continue
-                pending_regen.append(cid)
-            # Step 4b: ONE coalesced embed_fn call for every cache miss
-            if pending_regen:
-                texts_per = [self.get_chunks(self.clusters[c].ids.tolist())
-                             for c in pending_regen]
-                flat = [txt for ts in texts_per for txt in ts]
-                embs_all = np.ascontiguousarray(self.embed_fn(flat),
-                                                np.float32)
-                off = 0
-                for cid, ts in zip(pending_regen, texts_per):
-                    sub = embs_all[off:off + len(ts)]
-                    off += len(ts)
-                    chars = sum(len(txt) for txt in ts)
-                    gen_s = self.cost.embed_latency(chars)
-                    qi = owner[cid]
-                    lats[qi].l2_generate_s += gen_s
-                    lats[qi].n_generated += 1
-                    lats[qi].chars_embedded += chars
-                    missed[qi] = True
-                    self.clusters[cid].gen_latency_est = gen_s
-                    # copy: a view into embs_all would pin the whole batch's
-                    # embeddings in the cache and break its byte accounting
-                    self.cache.insert(
-                        cid, sub.copy(), gen_s,
-                        min_latency_threshold=self.threshold.threshold)
-                    resolved[cid] = sub
+            resolved = self.resolver.execute(plan, lats, missed)
             # Non-owners re-read the already-resident embeddings from DRAM
+            # (resident set is invariant here: nothing mutates the cache
+            # between execute() and scoring, so hoist the byte count)
+            resident = self.memory_bytes()
             for qi, probed in enumerate(probed_per_q):
                 for cid in probed:
                     if owner[cid] != qi:
                         lats[qi].l2_mem_load_s += self.cost.mem_load_latency(
-                            resolved[cid].nbytes,
-                            resident_bytes=self.memory_bytes())
+                            resolved[cid].nbytes, resident_bytes=resident)
                         lats[qi].n_shared_hits += 1
             # Step 6: per-query fused top-k in the query's own probed order
             for qi, probed in enumerate(probed_per_q):
@@ -263,7 +276,12 @@ class EdgeRAGIndex:
                 embs = np.concatenate([resolved[c] for c in probed])
                 idmap = np.concatenate(
                     [self.clusters[c].ids for c in probed])
-                vals, idx = topk_ip(embs, queries[qi:qi + 1], k)
+                if mesh is not None and len(embs) >= k:
+                    from repro.core.sharded_retrieval import sharded_topk_ip
+                    vals, idx = sharded_topk_ip(embs, queries[qi:qi + 1], k,
+                                                mesh, shard_axis)
+                else:
+                    vals, idx = topk_ip(embs, queries[qi:qi + 1], k)
                 vals, idx = np.asarray(vals), np.asarray(idx)
                 lats[qi].l2_search_s = self.cost.search_latency(
                     len(embs), self.dim)
@@ -349,9 +367,7 @@ class EdgeRAGIndex:
 
     # ---- maintenance helpers ----
     def _regen_embeddings(self, cid: int) -> np.ndarray:
-        cl = self.clusters[cid]
-        texts = self.get_chunks(cl.ids.tolist())
-        return np.ascontiguousarray(self.embed_fn(texts), np.float32)
+        return self.resolver.regenerate([cid])[0]
 
     def _restore_cluster(self, cid: int):
         embs = self._regen_embeddings(cid)
@@ -429,6 +445,7 @@ class EdgeRAGIndex:
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
         active = [c for c in self.clusters if c.active]
+        n_stored_rows = sum(c.size for c in active if c.stored)
         return {
             "nlist": self.nlist,
             "active_clusters": len(active),
@@ -436,6 +453,10 @@ class EdgeRAGIndex:
             "stored_clusters": sum(c.stored for c in active),
             "memory_bytes": self.memory_bytes(),
             "storage_bytes": self.storage_bytes(),
+            "storage_codec": self.storage.codec,
+            # fp32-equivalent footprint of the stored rows — the reduction
+            # denominator for quantized codecs
+            "storage_fp32_bytes": n_stored_rows * self.dim * 4,
             "cache_entries": len(self.cache),
             "cache_hit_rate": self.cache.hit_rate,
             "threshold_s": self.threshold.threshold,

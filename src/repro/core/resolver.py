@@ -1,0 +1,263 @@
+"""Tiered cluster-resolution pipeline: probe → PLAN → EXECUTE → score.
+
+EdgeRAG's central decision — where does a probed cluster's embedding matrix
+come from? — used to live inline in ``EdgeRAGIndex.search_batch``.  This
+module makes it an explicit subsystem shared by every consumer (single-query
+``search``, ``search_batch``, maintenance regeneration, the sharded scoring
+mode, and the serving engine's prefetch hook):
+
+  PLAN     :meth:`ClusterResolver.plan` union-dedups the batch's probed
+           clusters (owner = lowest-index query that probed each one) and
+           chooses a TIER per unique cluster, walking the tier ladder:
+
+             storage   selective index storage (Alg. 1); any codec —
+                       fp32 / fp16 / int8 (core/storage.py)
+             cache     cost-aware LFU DRAM cache (Alg. 2); the plan-time
+                       lookup is the batch's single counter-bump + decay
+             regen     coalesced online regeneration — pending clusters are
+                       packed into groups, ONE ``embed_fn`` call per group
+                       (one group unless ``max_group_chars`` bounds it)
+
+  EXECUTE  :meth:`ClusterResolver.execute` materializes the plan: a batched
+           ``get_many`` storage load (or the plan's prefetched payloads),
+           cached matrices, then the coalesced regenerations — charging each
+           owner's :class:`LatencyBreakdown` with exactly the single-query
+           cost formulas.  A storage key that vanished between plan and
+           execute (e.g. a deleted cluster file) falls back to regeneration
+           instead of crashing.
+
+The fp32 tier is bit-identical to the pre-refactor inlined logic: the same
+state mutations happen in the same order (cache access per unique cluster at
+plan time, inserts after regeneration, per-field latency accumulation in
+owner order), asserted by the Table-4 parity tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.costs import LatencyBreakdown
+
+TIER_STORAGE = "storage"
+TIER_CACHE = "cache"
+TIER_REGEN = "regen"
+
+
+@dataclasses.dataclass
+class ResolutionPlan:
+    """Explicit per-batch resolution decisions (see module docstring).
+
+    ``owner`` iterates in batch order (dict insertion order: by owning
+    query, then that query's probe order) — execution replays charges in
+    exactly this order.
+    """
+    probed_per_q: List[List[int]]        # per query: probed active clusters
+    owner: Dict[int, int]                # cluster id -> owning query index
+    tier: Dict[int, str]                 # cluster id -> chosen tier
+    storage_clusters: List[int]          # storage tier, owner order
+    cached: Dict[int, np.ndarray]        # cache tier: plan-time lookups
+    regen_groups: List[List[int]]        # one coalesced embed call per group
+    restore: List[int] = dataclasses.field(default_factory=list)
+    # ^ regen-tier clusters whose storage copy vanished out-of-band:
+    #   execution re-persists them (the Alg. 1 self-heal)
+    prefetched: Optional[Dict[int, np.ndarray]] = None  # early storage loads
+
+    @property
+    def regen_clusters(self) -> List[int]:
+        return [cid for group in self.regen_groups for cid in group]
+
+    @property
+    def n_unique(self) -> int:
+        return len(self.owner)
+
+
+class ClusterResolver:
+    """Executes the tier ladder for an :class:`EdgeRAGIndex`.
+
+    ``max_group_chars`` bounds the text volume of one coalesced ``embed_fn``
+    call (None = a single call for the whole batch, the serving default).
+    """
+
+    def __init__(self, index, *, max_group_chars: Optional[int] = None):
+        self.index = index
+        self.max_group_chars = max_group_chars
+
+    # ------------------------------------------------------------------
+    # plan
+    # ------------------------------------------------------------------
+    def plan(self, probed_per_q: Sequence[Sequence[int]]) -> ResolutionPlan:
+        ix = self.index
+        owner: Dict[int, int] = {}
+        for qi, probed in enumerate(probed_per_q):
+            for cid in probed:
+                owner.setdefault(cid, qi)
+        tier: Dict[int, str] = {}
+        storage_clusters: List[int] = []
+        cached: Dict[int, np.ndarray] = {}
+        pending: List[int] = []
+        restore: List[int] = []
+        for cid in owner:
+            cl = ix.clusters[cid]
+            if cl.stored:
+                if cid in ix.storage:
+                    tier[cid] = TIER_STORAGE
+                    storage_clusters.append(cid)
+                    continue
+                # storage copy vanished out-of-band: regenerate AND
+                # re-persist (same recovery as an execute-time vanish)
+                tier[cid] = TIER_REGEN
+                pending.append(cid)
+                restore.append(cid)
+                continue
+            hit = ix.cache.access(cid)   # Alg. 2: one bump + decay per batch
+            if hit is not None:
+                tier[cid] = TIER_CACHE
+                cached[cid] = hit
+                continue
+            tier[cid] = TIER_REGEN
+            pending.append(cid)
+        return ResolutionPlan(
+            probed_per_q=[list(p) for p in probed_per_q],
+            owner=owner, tier=tier, storage_clusters=storage_clusters,
+            cached=cached, regen_groups=self._coalesce(pending),
+            restore=restore)
+
+    def _coalesce(self, pending: List[int]) -> List[List[int]]:
+        if not pending:
+            return []
+        if self.max_group_chars is None:
+            return [list(pending)]
+        groups: List[List[int]] = []
+        cur: List[int] = []
+        chars = 0
+        for cid in pending:
+            c = self.index.clusters[cid].char_count
+            if cur and chars + c > self.max_group_chars:
+                groups.append(cur)
+                cur, chars = [], 0
+            cur.append(cid)
+            chars += c
+        if cur:
+            groups.append(cur)
+        return groups
+
+    # ------------------------------------------------------------------
+    # prefetch (serving engine hook)
+    # ------------------------------------------------------------------
+    def prefetch(self, plan: ResolutionPlan) -> ResolutionPlan:
+        """Issue the plan's storage loads ahead of execution.  The payloads
+        ride along on the plan so execute() doesn't re-read them; the engine
+        overlaps their modeled I/O seconds with prefill."""
+        if plan.storage_clusters and plan.prefetched is None:
+            loaded = self.index.storage.get_many(plan.storage_clusters)
+            plan.prefetched = {cid: emb for cid, emb
+                               in zip(plan.storage_clusters, loaded)
+                               if emb is not None}
+        return plan
+
+    # ------------------------------------------------------------------
+    # execute
+    # ------------------------------------------------------------------
+    def execute(self, plan: ResolutionPlan, lats: List[LatencyBreakdown],
+                missed: List[bool]) -> Dict[int, np.ndarray]:
+        """Materialize ``plan``; returns cluster id -> f32 (n, d) matrix.
+
+        Side effects mirror the single-query path: owners are charged tier
+        costs, regenerated clusters refresh ``gen_latency_est`` and enter
+        the cache under the current Alg. 3 threshold, and ``missed[qi]`` is
+        set for every query that owns a regenerated cluster.
+        """
+        ix = self.index
+        resolved: Dict[int, np.ndarray] = {}
+        regen_groups = [list(g) for g in plan.regen_groups]
+        fallback: List[int] = []      # storage keys gone since plan time
+        if plan.storage_clusters:
+            if plan.prefetched is not None:
+                loaded = [plan.prefetched.get(c)
+                          for c in plan.storage_clusters]
+            else:
+                loaded = ix.storage.get_many(plan.storage_clusters)
+            for cid, embs in zip(plan.storage_clusters, loaded):
+                # a key deleted (or a cluster mutated) since plan/prefetch
+                # time falls back to regeneration instead of crashing or
+                # scoring stale rows
+                if embs is None or len(embs) != ix.clusters[cid].size:
+                    fallback.append(cid)
+                    continue
+                try:
+                    nbytes = ix.storage.stored_bytes(cid)
+                except KeyError:
+                    fallback.append(cid)
+                    continue
+                lat = lats[plan.owner[cid]]
+                lat.l2_storage_load_s += ix.cost.storage_load_latency(nbytes)
+                if ix.storage.codec != "fp32":
+                    # decode is compute, not I/O: charged separately so the
+                    # engine's prefetch overlap only hides true I/O seconds
+                    lat.l2_dequant_s += ix.cost.dequant_latency(embs.size)
+                lat.n_storage_loads += 1
+                resolved[cid] = embs
+        for cid, embs in plan.cached.items():
+            # same staleness guard as the storage tier: a cluster mutated
+            # since plan time would misalign the scoring id map
+            if len(embs) != ix.clusters[cid].size:
+                ix.cache.invalidate(cid)   # don't let the stale entry recur
+                fallback.append(cid)
+                continue
+            lat = lats[plan.owner[cid]]
+            lat.l2_cache_hit_s += ix.cost.mem_load_latency(
+                embs.nbytes, resident_bytes=ix.memory_bytes())
+            lat.n_cache_hits += 1
+            resolved[cid] = embs
+        if fallback:
+            regen_groups.append(fallback)
+        heal = set(fallback) | set(plan.restore)
+        for group in regen_groups:
+            for cid, sub, chars in self._regen_group(group):
+                healed = cid in heal and ix.clusters[cid].stored
+                if healed:
+                    # self-heal the vanished/stale storage copy so later
+                    # batches load instead of regenerating forever
+                    ix.storage.put(cid, sub.copy())
+                gen_s = ix.cost.embed_latency(chars)
+                qi = plan.owner[cid]
+                lats[qi].l2_generate_s += gen_s
+                lats[qi].n_generated += 1
+                lats[qi].chars_embedded += chars
+                missed[qi] = True
+                ix.clusters[cid].gen_latency_est = gen_s
+                if not healed:
+                    # copy: a view into the group's matrix would pin the
+                    # whole group in the cache and break its byte accounting.
+                    # (Healed clusters skip the cache: plan() always serves
+                    # stored clusters from the storage tier, so a cached
+                    # copy would be dead weight.)
+                    ix.cache.insert(
+                        cid, sub.copy(), gen_s,
+                        min_latency_threshold=ix.threshold.threshold)
+                resolved[cid] = sub
+        return resolved
+
+    # ------------------------------------------------------------------
+    # regeneration (shared with the maintenance paths)
+    # ------------------------------------------------------------------
+    def _regen_group(self, cids: Sequence[int]):
+        """ONE ``embed_fn`` call over the group's concatenated texts; yields
+        (cid, embeddings view, char count) per cluster."""
+        ix = self.index
+        texts_per = [ix.get_chunks(ix.clusters[c].ids.tolist())
+                     for c in cids]
+        flat = [txt for ts in texts_per for txt in ts]
+        embs_all = np.ascontiguousarray(ix.embed_fn(flat), np.float32)
+        off = 0
+        for cid, ts in zip(cids, texts_per):
+            sub = embs_all[off:off + len(ts)]
+            off += len(ts)
+            yield cid, sub, sum(len(txt) for txt in ts)
+
+    def regenerate(self, cids: Sequence[int]) -> List[np.ndarray]:
+        """Coalesced regeneration outside a search (restore / split paths).
+        No latency attribution, no cache interaction."""
+        return [sub.copy() for _, sub, _ in self._regen_group(list(cids))]

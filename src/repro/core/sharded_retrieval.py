@@ -20,8 +20,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.distributed import shard_map   # jax 0.4/0.5 compat shim
 
 NEG_INF = -1e30
 

@@ -1,66 +1,169 @@
-"""Second-level embedding storage backend.
+"""Second-level embedding storage backend with quantized codecs.
 
 Models the paper's split between DRAM (first-level centroids, cache) and
 SD-card storage (precomputed heavy-cluster embeddings).  The "disk" flavor
-actually writes .npy files so persistence is real; the "memory" flavor keeps
-arrays in a dict (fast unit tests).  Either way the *edge* latency of a load
-comes from the cost model, not this machine's SSD.
+actually writes .npz files so persistence is real; the "memory" flavor keeps
+payloads in a dict (fast unit tests).  Either way the *edge* latency of a
+load comes from the cost model, not this machine's SSD.
+
+Codecs (beyond-paper: MobileRAG-style on-device memory budgeting): the
+stored payload can be narrowed below fp32 —
+
+  fp32   bit-exact roundtrip (default; keeps the Table-4 parity claims)
+  fp16   half-precision embeddings                       (2x fewer bytes)
+  int8   per-row symmetric int8 + fp16 scales, reusing
+         models/quantization.py's KV-cache scheme        (~3.9x fewer bytes)
+
+``get``/``get_many`` always return contiguous f32 matrices (decode on
+load); ``stored_bytes``/``total_bytes`` report the *encoded* payload size,
+which is what the cost model charges for a storage load.
 """
 from __future__ import annotations
 
 import os
+import re
 import tempfile
-from typing import Dict, Optional
+import zipfile
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
+
+CODECS = ("fp32", "fp16", "int8")
+
+_CLUSTER_FILE = re.compile(r"^cluster_(\d+)\.npz$")
 
 
 class StorageBackend:
     """Keyed blob store for per-cluster embedding matrices."""
 
-    def __init__(self, mode: str = "memory", root: Optional[str] = None):
+    def __init__(self, mode: str = "memory", root: Optional[str] = None,
+                 codec: str = "fp32"):
         assert mode in ("memory", "disk")
+        assert codec in CODECS, f"codec must be one of {CODECS}, got {codec}"
         self.mode = mode
-        self._mem: Dict[int, np.ndarray] = {}
+        self.codec = codec
+        self._mem: Dict[int, Dict[str, np.ndarray]] = {}
+        self._nbytes: Dict[int, int] = {}       # encoded payload bytes
+        self.root: Optional[str] = None
         if mode == "disk":
             self.root = root or tempfile.mkdtemp(prefix="edgerag_store_")
             os.makedirs(self.root, exist_ok=True)
 
-    def _path(self, key: int) -> str:
-        return os.path.join(self.root, f"cluster_{key}.npy")
+    # ---- codec ----------------------------------------------------------
+    def _encode(self, emb: np.ndarray) -> Dict[str, np.ndarray]:
+        emb = np.ascontiguousarray(emb, np.float32)
+        if self.codec == "fp32":
+            return {"emb": emb}
+        if self.codec == "fp16":
+            return {"emb": emb.astype(np.float16)}
+        from repro.models.quantization import quantize_rows
+        q, scale = quantize_rows(emb)
+        return {"q": q, "scale": scale}
 
-    def put(self, key: int, embeddings: np.ndarray) -> int:
-        """Returns stored byte size."""
-        emb = np.ascontiguousarray(embeddings, np.float32)
+    def _decode(self, payload: Dict[str, np.ndarray]) -> np.ndarray:
+        if "q" in payload:
+            from repro.models.quantization import dequantize_rows
+            return dequantize_rows(payload["q"], payload["scale"])
+        return np.ascontiguousarray(payload["emb"], np.float32)
+
+    # ---- filesystem (disk mode only) ------------------------------------
+    def _path(self, key: int) -> str:
+        if self.root is None:
+            raise RuntimeError(
+                "memory-mode StorageBackend has no filesystem root")
+        return os.path.join(self.root, f"cluster_{key}.npz")
+
+    def _load(self, key: int) -> Optional[Dict[str, np.ndarray]]:
         if self.mode == "memory":
-            self._mem[key] = emb
+            return self._mem.get(key)
+        path = self._path(key)
+        if not os.path.exists(path):
+            return None
+        with np.load(path) as z:
+            return {name: z[name] for name in z.files}
+
+    # ---- public API ------------------------------------------------------
+    def put(self, key: int, embeddings: np.ndarray) -> int:
+        """Returns encoded (stored) byte size."""
+        payload = self._encode(embeddings)
+        self._nbytes[key] = sum(a.nbytes for a in payload.values())
+        if self.mode == "memory":
+            self._mem[key] = payload
         else:
-            np.save(self._path(key), emb)
-        return emb.nbytes
+            np.savez(self._path(key), **payload)
+        return self._nbytes[key]
 
     def get(self, key: int) -> np.ndarray:
-        if self.mode == "memory":
-            return self._mem[key]
-        return np.load(self._path(key))
+        payload = self._load(key)
+        if payload is None:
+            raise KeyError(key)
+        return self._decode(payload)
+
+    def get_many(self, keys: Sequence[int]) -> List[Optional[np.ndarray]]:
+        """Batched load, results in ``keys`` order; a missing key yields
+        ``None`` (callers fall back to regeneration instead of crashing)."""
+        out: List[Optional[np.ndarray]] = []
+        for key in keys:
+            payload = self._load(key)
+            out.append(None if payload is None else self._decode(payload))
+        return out
 
     def delete(self, key: int):
+        self._nbytes.pop(key, None)
         if self.mode == "memory":
             self._mem.pop(key, None)
         elif os.path.exists(self._path(key)):
             os.remove(self._path(key))
+
+    def clear(self):
+        """Drop every stored cluster (index rebuilds)."""
+        for key in self.keys():
+            self.delete(key)
+        self._nbytes.clear()
 
     def __contains__(self, key: int) -> bool:
         if self.mode == "memory":
             return key in self._mem
         return os.path.exists(self._path(key))
 
-    def keys(self):
+    def keys(self) -> List[int]:
         if self.mode == "memory":
             return list(self._mem)
-        return [int(f.split("_")[1].split(".")[0])
-                for f in os.listdir(self.root) if f.endswith(".npy")]
+        # foreign files in a user-supplied root are not ours to touch
+        return [int(m.group(1)) for m in
+                (_CLUSTER_FILE.match(f) for f in os.listdir(self.root)) if m]
+
+    def stored_bytes(self, key: int) -> int:
+        """Encoded payload bytes of one cluster (what a load streams)."""
+        if key not in self._nbytes:       # e.g. fresh instance on an old root
+            if self.mode == "memory":
+                if key not in self._mem:
+                    raise KeyError(key)
+                self._nbytes[key] = sum(a.nbytes
+                                        for a in self._mem[key].values())
+            else:
+                self._nbytes[key] = self._disk_payload_nbytes(key)
+        return self._nbytes[key]
+
+    def _disk_payload_nbytes(self, key: int) -> int:
+        """Payload size from the .npy headers inside the zip — no array
+        data is read (total_bytes on a reopened root stays a metadata
+        query, not an O(store) load)."""
+        path = self._path(key)
+        if not os.path.exists(path):
+            raise KeyError(key)
+        total = 0
+        with zipfile.ZipFile(path) as z:
+            for name in z.namelist():
+                with z.open(name) as f:
+                    version = np.lib.format.read_magic(f)
+                    read_header = getattr(
+                        np.lib.format,
+                        "read_array_header_%d_%d" % version)
+                    shape, _, dtype = read_header(f)
+                    total += int(np.prod(shape, dtype=np.int64)
+                                 * dtype.itemsize)
+        return total
 
     def total_bytes(self) -> int:
-        if self.mode == "memory":
-            return sum(a.nbytes for a in self._mem.values())
-        return sum(os.path.getsize(self._path(k)) for k in self.keys())
+        return sum(self.stored_bytes(k) for k in self.keys())

@@ -9,6 +9,13 @@ JetStream fp8/int8 caches use the same granularity).
 kernel loads int8 blocks HBM→VMEM and dequantizes in registers
 (kernels/decode_attention supports int8 inputs + scales); the jnp path
 mirrors it for CPU validation.
+
+The same per-row symmetric scheme backs the EdgeRAG *quantized storage
+tier* (core/storage.py codec="int8"): cluster embedding matrices are
+(n, d) row-quantized with :func:`quantize_rows` before persisting, and
+dequantized on load with :func:`dequantize_rows`.  Scales are narrowed to
+fp16 on the storage side (2 B/row payload overhead vs. 4·d B of fp32
+embeddings).
 """
 from __future__ import annotations
 
@@ -16,6 +23,7 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class QuantKV(NamedTuple):
@@ -50,3 +58,32 @@ def quant_insert(cache: QuantKV, new: jax.Array, pos) -> QuantKV:
 def init_quant_cache(batch: int, smax: int, kh: int, d: int) -> QuantKV:
     return QuantKV(jnp.zeros((batch, smax, kh, d), jnp.int8),
                    jnp.zeros((batch, smax, kh, 1), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Embedding-matrix row quantization (EdgeRAG quantized storage tier)
+# ---------------------------------------------------------------------------
+def quantize_rows(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(n, d) f32 -> (int8 (n, d), fp16 scales (n, 1)).
+
+    Same symmetric per-row scheme as :func:`quantize_kv` (one scale per
+    embedding row instead of per (token, head)), in numpy for the storage
+    path.  The scale is snapped to its STORED fp16 value — clamped to the
+    fp16 minimum normal so tiny-magnitude rows quantize with bounded error
+    instead of decoding to zeros off an underflowed scale — and the int8
+    values are computed against that snapped scale.
+    """
+    x = np.ascontiguousarray(x, np.float32)
+    amax = np.max(np.abs(x), axis=-1, keepdims=True)
+    f16 = np.finfo(np.float16)
+    # clamp both ways: an underflowed scale decodes rows to zero, an
+    # overflowed one (inf) decodes them to NaN
+    scale = np.clip(amax / 127.0, f16.tiny, f16.max).astype(np.float16)
+    q = np.clip(np.round(x / scale.astype(np.float32)), -127, 127)
+    return q.astype(np.int8), scale
+
+
+def dequantize_rows(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`quantize_rows`; returns contiguous f32 (n, d)."""
+    return np.ascontiguousarray(
+        q.astype(np.float32) * scale.astype(np.float32))

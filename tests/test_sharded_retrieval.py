@@ -27,6 +27,23 @@ for n, d, q, k in [(1000, 64, 3, 10), (63, 32, 1, 5), (4096, 128, 2, 32)]:
     assert np.allclose(np.sort(vals, 1), np.sort(np.asarray(rv), 1), atol=1e-4)
     assert (idx == np.asarray(ri)).mean() > 0.95, (n, k)
 print("sharded retrieval OK")
+
+# EdgeRAG sharded scoring mode: search_batch(mesh=...) routes the resolved
+# cluster slabs through sharded_topk_ip; fp32 tier must match unsharded ids.
+from repro.core import EdgeCostModel, EdgeRAGIndex
+from repro.data import generate_dataset
+
+ds = generate_dataset(n_records=600, dim=32, n_topics=20, n_queries=8, seed=3)
+def fresh():
+    er = EdgeRAGIndex(32, ds.embedder, ds.get_chunks, EdgeCostModel(),
+                      slo_s=0.15, cache_bytes=1 << 20)
+    er.build(ds.chunk_ids, ds.texts, nlist=20, embeddings=ds.embeddings,
+             seed=1)
+    return er
+ids_u, _, _ = fresh().search_batch(ds.query_embs, 10, 5)
+ids_s, _, _ = fresh().search_batch(ds.query_embs, 10, 5, mesh=mesh)
+assert np.array_equal(ids_u, ids_s)
+print("edgerag sharded mode OK")
 '''
 
 
@@ -39,3 +56,4 @@ def test_sharded_retrieval_matches_reference():
                          capture_output=True, text=True, timeout=600)
     assert res.returncode == 0, res.stdout + res.stderr
     assert "sharded retrieval OK" in res.stdout
+    assert "edgerag sharded mode OK" in res.stdout

@@ -1,0 +1,190 @@
+"""StorageBackend: codec roundtrips (memory + disk), get_many ordering,
+missing-file recovery through the resolver's regeneration fallback, clear(),
+memory-mode root guard, and quantized byte reduction."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import EdgeCostModel, EdgeRAGIndex
+from repro.core.storage import CODECS, StorageBackend
+from repro.data import generate_dataset
+
+pytestmark = pytest.mark.fast
+
+
+def _emb(n=40, d=64, seed=0):
+    rng = np.random.default_rng(seed)
+    e = rng.standard_normal((n, d)).astype(np.float32)
+    return e / np.linalg.norm(e, axis=1, keepdims=True)
+
+
+@pytest.mark.parametrize("mode", ["memory", "disk"])
+@pytest.mark.parametrize("codec", CODECS)
+def test_roundtrip_all_codecs(mode, codec, tmp_path):
+    root = str(tmp_path) if mode == "disk" else None
+    s = StorageBackend(mode, root=root, codec=codec)
+    emb = _emb()
+    s.put(3, emb)
+    out = s.get(3)
+    assert out.dtype == np.float32 and out.shape == emb.shape
+    if codec == "fp32":
+        assert np.array_equal(out, emb)          # bit-exact
+    else:
+        atol = 1e-3 if codec == "fp16" else 0.05
+        np.testing.assert_allclose(out, emb, atol=atol)
+
+
+def test_get_many_ordering_and_missing(tmp_path):
+    s = StorageBackend("disk", root=str(tmp_path))
+    mats = {k: _emb(seed=k) for k in (5, 1, 9)}
+    for k, m in mats.items():
+        s.put(k, m)
+    out = s.get_many([9, 77, 1, 5])
+    assert out[1] is None                         # missing key -> None
+    assert np.array_equal(out[0], mats[9])
+    assert np.array_equal(out[2], mats[1])
+    assert np.array_equal(out[3], mats[5])
+    with pytest.raises(KeyError):
+        s.get(77)
+
+
+@pytest.mark.parametrize("mode", ["memory", "disk"])
+def test_clear(mode, tmp_path):
+    root = str(tmp_path) if mode == "disk" else None
+    s = StorageBackend(mode, root=root)
+    for k in range(4):
+        s.put(k, _emb(n=5, seed=k))
+    assert len(s.keys()) == 4 and s.total_bytes() > 0
+    s.clear()
+    assert s.keys() == [] and s.total_bytes() == 0
+    if mode == "disk":
+        assert not any(f.endswith(".npz") for f in os.listdir(root))
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_reopened_root_is_metadata_only(codec, tmp_path):
+    """A fresh StorageBackend on an existing root reports exact payload
+    sizes (parsed from npy headers, no array reads) and still decodes."""
+    a = StorageBackend("disk", root=str(tmp_path), codec=codec)
+    sizes = {k: a.put(k, _emb(n=10 + k, seed=k)) for k in (1, 2)}
+    b = StorageBackend("disk", root=str(tmp_path), codec=codec)
+    assert {k: b.stored_bytes(k) for k in (1, 2)} == sizes
+    assert b.total_bytes() == sum(sizes.values())
+    assert np.array_equal(b.get(1), a.get(1))
+    with pytest.raises(KeyError):
+        b.stored_bytes(99)
+
+
+def test_foreign_files_in_root_are_ignored(tmp_path):
+    """keys()/clear()/total_bytes tolerate unrelated files in a
+    user-supplied storage root."""
+    s = StorageBackend("disk", root=str(tmp_path))
+    s.put(4, _emb(n=6))
+    (tmp_path / "data.npz").write_bytes(b"not ours")
+    (tmp_path / "cluster_backup.npz").write_bytes(b"not ours")
+    assert s.keys() == [4]
+    assert s.total_bytes() == s.stored_bytes(4)
+    s.clear()
+    assert s.keys() == []
+    assert (tmp_path / "data.npz").exists()       # untouched
+
+
+def test_memory_mode_never_touches_root():
+    s = StorageBackend("memory")
+    assert s.root is None
+    assert s.keys() == [] and s.total_bytes() == 0
+    s.put(0, _emb(n=3))
+    s.delete(0)
+    assert 1 not in s
+    with pytest.raises(RuntimeError):
+        s._path(0)
+
+
+def test_quantized_byte_reduction():
+    """fp16 halves the payload exactly; int8 approaches 4x (per-row fp16
+    scales cost 2 B against 4·d B of fp32 rows)."""
+    emb = _emb(n=128, d=64)
+    sizes = {c: StorageBackend("memory", codec=c).put(0, emb)
+             for c in CODECS}
+    assert sizes["fp32"] == emb.nbytes
+    assert sizes["fp32"] / sizes["fp16"] == 2.0
+    assert sizes["fp32"] / sizes["int8"] >= 3.5
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return generate_dataset(n_records=700, dim=32, n_topics=24,
+                            n_queries=16, seed=11)
+
+
+def _fresh(ds, **kw):
+    er = EdgeRAGIndex(32, ds.embedder, ds.get_chunks, EdgeCostModel(),
+                      slo_s=0.05, **kw)   # tiny SLO: most clusters stored
+    er.build(ds.chunk_ids, ds.texts, nlist=24, embeddings=ds.embeddings,
+             seed=1)
+    return er
+
+
+def test_disk_missing_file_falls_back_to_regen(ds, tmp_path):
+    """Deleting cluster files behind the index's back degrades to online
+    regeneration — same results, no crash — and the first search
+    re-persists the vanished copies (Alg. 1 self-heal), so later searches
+    load from storage again."""
+    ref = _fresh(ds)
+    er = _fresh(ds, storage_mode="disk", storage_root=str(tmp_path / "s"))
+    assert er.storage.keys()
+    for f in os.listdir(er.storage.root):
+        os.remove(os.path.join(er.storage.root, f))
+    r_ids, r_vals, _ = ref.search(ds.query_embs[0], 10, 5)
+    ids, vals, lat = er.search(ds.query_embs[0], 10, 5)
+    assert np.array_equal(ids, r_ids)
+    assert np.array_equal(vals, r_vals)
+    assert lat.n_storage_loads == 0 and lat.n_generated > 0
+    assert er.storage.keys()             # healed copies persisted
+    # the same query now loads every probed cluster from storage again
+    r_ids2, r_vals2, _ = ref.search(ds.query_embs[0], 10, 5)
+    ids2, vals2, lat2 = er.search(ds.query_embs[0], 10, 5)
+    assert np.array_equal(ids2, r_ids2)
+    assert np.array_equal(vals2, r_vals2)
+    assert lat2.n_generated == 0
+    assert lat2.n_storage_loads > 0      # healed clusters load again
+    # every probed cluster resolves without regeneration now
+    assert (lat2.n_storage_loads + lat2.n_cache_hits
+            == lat2.n_clusters_probed)
+
+
+def test_stale_plan_storage_key_falls_back(ds, tmp_path):
+    """A storage key that vanishes between plan and execute reroutes to the
+    regeneration group instead of crashing (resolver fallback)."""
+    ref = _fresh(ds)
+    er = _fresh(ds, storage_mode="disk", storage_root=str(tmp_path / "s"))
+    plan = er.plan_batch(ds.query_embs[:6], 5)
+    assert plan.storage_clusters
+    for f in os.listdir(er.storage.root):
+        os.remove(os.path.join(er.storage.root, f))
+    ids, vals, lats = er.search_batch(ds.query_embs[:6], 10, 5, plan=plan)
+    r_ids, r_vals, _ = ref.search_batch(ds.query_embs[:6], 10, 5)
+    assert np.array_equal(ids, r_ids)
+    assert np.array_equal(vals, r_vals)
+    # the vanished storage clusters were regenerated, not loaded
+    assert sum(l.n_storage_loads for l in lats) == 0
+    assert sum(l.n_generated for l in lats) >= len(plan.storage_clusters)
+
+
+def test_rebuild_clears_stale_storage(ds):
+    """build() wipes the previous build's stored clusters, so storage never
+    accumulates orphans across rebuilds."""
+    er = _fresh(ds)
+    first_keys = set(er.storage.keys())
+    assert first_keys
+    er.threshold.threshold = 0.5          # adapted to the old corpus
+    er.build(ds.chunk_ids, ds.texts, nlist=12, embeddings=ds.embeddings,
+             seed=2)
+    stored_now = {cid for cid, cl in enumerate(er.clusters) if cl.stored}
+    assert set(er.storage.keys()) == stored_now
+    assert er.storage_bytes() == sum(
+        er.storage.stored_bytes(k) for k in stored_now)
+    # the learned Alg. 3 threshold resets with the corpus
+    assert er.threshold.threshold == 0.0
+    assert len(er.cache) == 0
