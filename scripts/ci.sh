@@ -19,6 +19,8 @@ elif [[ "${1:-}" == "bench-smoke" ]]; then
         --out "$out/BENCH_retrieval.json"
     python -m benchmarks.quantized_tiers --quick \
         --out "$out/BENCH_quantized_tiers.json"
+    python -m benchmarks.online_churn --quick \
+        --out "$out/BENCH_online_churn.json"
     python - "$out" <<'PY'
 import json, os, sys
 
@@ -43,6 +45,26 @@ for codec in ("fp32", "fp16", "int8"):
                 "reduction", "recall_ratio_vs_fp32"):
         assert key in cell, f"codec {codec} missing key: {key}"
 assert q["recall_criterion_met"], "quantized recall fell below 0.95 of fp32"
+
+c = json.load(open(os.path.join(out, "BENCH_online_churn.json")))
+for key in ("n_records", "n_queries", "nlist", "k", "nprobe", "gap_mean_s",
+            "churn", "recall", "arms", "p99_speedup_sync_over_deferred",
+            "criteria"):
+    assert key in c, f"BENCH_online_churn.json missing key: {key}"
+for key in ("inserts", "removes", "churn_frac"):
+    assert key in c["churn"], f"churn block missing key: {key}"
+for key in ("churned_at10", "oracle_at10", "ratio"):
+    assert key in c["recall"], f"recall block missing key: {key}"
+for arm in ("sync", "deferred"):
+    cell = c["arms"][arm]
+    for key in ("n_query_reqs", "p50_ttft_s", "p99_ttft_s", "mean_ttft_s",
+                "maintenance_edge_s", "maintenance_in_stream_s",
+                "maintenance_ops"):
+        assert key in cell, f"arm {arm} missing key: {key}"
+assert c["criteria"]["recall_ratio_ok"], \
+    "churned recall fell below 0.99 of the oracle rebuild"
+assert c["criteria"]["deferred_p99_lower"], \
+    "deferred maintenance did not beat synchronous on p99 TTFT"
 
 print("bench-smoke OK: BENCH JSON schemas intact")
 PY

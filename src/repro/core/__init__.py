@@ -13,5 +13,7 @@ from repro.core.edgerag import EdgeCluster, EdgeRAGIndex  # noqa
 from repro.core.flat_index import FlatIndex  # noqa
 from repro.core.ivf_index import IVFIndex  # noqa
 from repro.core.kmeans import kmeans  # noqa
+from repro.core.maintenance import (MaintenanceOp, MaintenanceReport,  # noqa
+                                    MaintenanceScheduler)
 from repro.core.resolver import ClusterResolver, ResolutionPlan  # noqa
 from repro.core.storage import StorageBackend  # noqa

@@ -10,7 +10,9 @@ Improves the two-level IVF index for memory-constrained serving:
   3. ADAPTIVE COST-AWARE CACHING (Alg. 2 + 3): regenerated embeddings are
      cached under a cost-weighted LFU policy with an adaptive minimum-
      latency admission threshold.
-  4. Online INSERT / REMOVE with cluster split / merge (§5.4).
+  4. Online INSERT / REMOVE with cluster split / merge (§5.4), made
+     concurrent-safe with precomputed plans through GENERATION STAMPS and
+     optionally deferred through the MaintenanceScheduler (see below).
 
 Retrieval (Fig. 9): probe centroids → per probed cluster resolve embeddings
 via storage / cache / regeneration → fused top-k → chunk ids.
@@ -60,6 +62,25 @@ serving engine can prefetch the plan's storage loads before prompt
 assembly.  ``search_batch(..., mesh=...)`` routes the second-level scoring
 of each query's resolved slab through ``sharded_topk_ip`` (pod-sharded
 mode, core/sharded_retrieval.py); ids match the unsharded path.
+
+PLAN-STALENESS CONTRACT (core/maintenance.py): every cluster carries a
+monotonically increasing ``generation``, bumped by any mutation — insert,
+remove, split, merge, restore, stored-copy drop.  A ``ResolutionPlan``
+snapshots each planned cluster's generation, and ``execute`` regenerates
+(never scores) any cluster whose generation moved between plan and
+execution — including SAME-SIZE mutations the old row-count guard missed.
+``stored_generation`` tracks which generation the storage copy reflects;
+stale copies are bypassed and re-persisted.  A stale plan therefore always
+degrades to regeneration over the clusters' *current* membership (or to
+skipping clusters that were merged away), never to wrong ids.  Code that
+mutates a cluster without going through insert / remove must bump
+``generation`` itself.
+
+Maintenance runs synchronously inside insert / remove by default
+(``maintenance="sync"``, the seed behavior).  With
+``maintenance="deferred"`` mutations only enqueue split / merge / restore
+onto ``self.maintenance`` (a MaintenanceScheduler) and return fast; the
+serving layer drains the queue between steps under an edge-cost budget.
 """
 from __future__ import annotations
 
@@ -72,6 +93,8 @@ from repro.core.cache_policy import (CostAwareLFUCache,
                                      MinLatencyThresholdController)
 from repro.core.costs import EdgeCostModel, LatencyBreakdown, WallTimer
 from repro.core.kmeans import kmeans
+from repro.core.maintenance import (OP_DROP_STORE, OP_MERGE, OP_RESTORE,
+                                    OP_SPLIT, MaintenanceScheduler)
 from repro.core.resolver import ClusterResolver, ResolutionPlan
 from repro.core.storage import StorageBackend
 from repro.kernels.ivf_topk.ops import topk_ip
@@ -84,10 +107,17 @@ class EdgeCluster:
     gen_latency_est: float          # profiled regeneration latency (Alg. 1)
     stored: bool = False            # embeddings persisted to storage
     active: bool = True             # tombstone after merge
+    generation: int = 0             # bumped on ANY mutation (plan staleness)
+    stored_generation: int = -1     # generation the storage copy reflects
 
     @property
     def size(self) -> int:
         return len(self.ids)
+
+    @property
+    def storage_fresh(self) -> bool:
+        """The stored copy (if any) reflects the current membership."""
+        return self.stored and self.stored_generation == self.generation
 
 
 class EdgeRAGIndex:
@@ -103,7 +133,10 @@ class EdgeRAGIndex:
                  storage_codec: str = "fp32",
                  storage_root: Optional[str] = None,
                  split_max_chars: int = 200_000,
-                 merge_min_size: int = 2):
+                 merge_min_size: int = 2,
+                 maintenance: str = "sync",
+                 maintenance_budget_s: Optional[float] = None):
+        assert maintenance in ("sync", "deferred"), maintenance
         self.dim = dim
         self.embed_fn = embed_fn
         self.get_chunks = get_chunks
@@ -121,6 +154,9 @@ class EdgeRAGIndex:
         self.clusters: List[EdgeCluster] = []
         self.split_max_chars = split_max_chars
         self.merge_min_size = merge_min_size
+        self.maintenance_mode = maintenance
+        self.maintenance = MaintenanceScheduler(
+            self, budget_s_per_step=maintenance_budget_s)
         self._chunk_chars: Dict[int, int] = {}
         self._chunk_cluster: Dict[int, int] = {}   # chunk id -> cluster id
 
@@ -140,6 +176,7 @@ class EdgeRAGIndex:
         # clusters, cached embeddings, the adapted Alg. 3 threshold (learned
         # from the old latency distribution), and the char table
         self.storage.clear()
+        self.maintenance.clear()        # queued ops describe the old corpus
         self.cache = CostAwareLFUCache(self.cache.capacity_bytes,
                                        self.cache.decay_factor)
         self.threshold = MinLatencyThresholdController(
@@ -162,6 +199,7 @@ class EdgeRAGIndex:
                 self.storage.put(len(self.clusters),
                                  embeddings[sel])          # persist heavy tail
                 cl.stored = True
+                cl.stored_generation = cl.generation
             self.clusters.append(cl)
         # second-level embeddings are now PRUNED (not retained in memory)
         return assign
@@ -189,13 +227,22 @@ class EdgeRAGIndex:
     # ------------------------------------------------------------------
     def _probe(self, queries: np.ndarray, nprobe: int) -> List[List[int]]:
         """ONE fused centroid top-k over the batch; per query, the probed
-        active non-empty clusters in probe order."""
+        active non-empty clusters in probe order.
+
+        Tombstoned (merged-away) and emptied-out clusters keep a centroid
+        in the first level, so the top-k over-requests by their count and
+        truncates back to ``nprobe`` after filtering — otherwise every such
+        centroid that outranks a live one silently shrinks the probe set
+        below ``nprobe`` (recall loss on merge-heavy indexes).  With no
+        dead clusters this is exactly a ``min(nprobe, nlist)`` top-k.
+        """
+        n_dead = sum(not c.active or c.size == 0 for c in self.clusters)
         _, probed_all = topk_ip(self.centroids, queries,
-                                min(nprobe, self.nlist))
+                                min(nprobe + n_dead, self.nlist))
         probed_all = np.asarray(probed_all)
         return [[int(c) for c in probed_all[qi]
                  if c >= 0 and self.clusters[int(c)].active
-                 and self.clusters[int(c)].size > 0]
+                 and self.clusters[int(c)].size > 0][:nprobe]
                 for qi in range(queries.shape[0])]
 
     def plan_batch(self, query_embs: np.ndarray, nprobe: int, *,
@@ -276,6 +323,10 @@ class EdgeRAGIndex:
                 embs = np.concatenate([resolved[c] for c in probed])
                 idmap = np.concatenate(
                     [self.clusters[c].ids for c in probed])
+                if len(embs) == 0:
+                    # every probed cluster vanished (merged away) between
+                    # plan and execute — a stale plan degrades to no hits
+                    continue
                 if mesh is not None and len(embs) >= k:
                     from repro.core.sharded_retrieval import sharded_topk_ip
                     vals, idx = sharded_topk_ip(embs, queries[qi:qi + 1], k,
@@ -317,25 +368,46 @@ class EdgeRAGIndex:
     # online updates (§5.4)
     # ------------------------------------------------------------------
     def insert(self, chunk_id: int, text: str,
-               embedding: Optional[np.ndarray] = None):
+               embedding: Optional[np.ndarray] = None) -> int:
+        """Insert one chunk; returns the cluster id it LANDED in (after any
+        split moved it).  In deferred mode the heavy follow-up work
+        (restore / split) is queued on ``self.maintenance`` instead of
+        running inline."""
         if embedding is None:
             embedding = self.embed_fn([text])[0]
         embedding = np.asarray(embedding, np.float32)
-        q = embedding[None] / max(np.linalg.norm(embedding), 1e-9)
-        _, idx = topk_ip(self.centroids, q, 1)
-        cid = int(np.asarray(idx)[0, 0])
+        # assignment by the same un-normalized inner product that build's
+        # spherical k-means and the retrieval probe use (centroids are
+        # unit-norm, so ordering is scale-invariant): normalizing here
+        # rounds differently than the probe's raw IP and can flip near-ties,
+        # landing a chunk in a cluster its own embedding never probes.
+        # Tombstoned clusters are excluded — their buried centroids can
+        # outrank every live one (see _probe), and a chunk appended to an
+        # inactive cluster would be silently unretrievable.
+        active_idx = np.array([j for j, c in enumerate(self.clusters)
+                               if c.active], np.int64)
+        _, idx = topk_ip(self.centroids[active_idx], embedding[None], 1)
+        cid = int(active_idx[int(np.asarray(idx)[0, 0])])
         cl = self.clusters[cid]
         cl.ids = np.append(cl.ids, np.int64(chunk_id))
         cl.char_count += len(text)
+        cl.generation += 1
         self._chunk_chars[int(chunk_id)] = len(text)
         self._chunk_cluster[int(chunk_id)] = cid
         cl.gen_latency_est = self.cost.embed_latency(cl.char_count)
         self.cache.invalidate(cid)                      # stale embeddings
-        if self.store_heavy and cl.gen_latency_est > self.slo_s:
-            self._restore_cluster(cid)                  # regenerate + persist
         if cl.char_count > self.split_max_chars:
-            self._split_cluster(cid)
-        return cid
+            # a pending split supersedes a restore: the split re-persists
+            # its parts per Alg. 1 itself, so restoring first would
+            # regenerate + write a copy the split immediately deletes
+            ops = [(OP_SPLIT, cid)]
+        elif self.store_heavy and cl.gen_latency_est > self.slo_s:
+            ops = [(OP_RESTORE, cid)]                   # regenerate + persist
+        else:
+            ops = []
+        self._dispatch_maintenance(ops)
+        # a synchronous split may have moved the chunk to the appended slot
+        return self._chunk_cluster[int(chunk_id)]
 
     def remove(self, chunk_id: int) -> Optional[int]:
         # O(1) lookup through the chunk->cluster map (kept consistent by
@@ -350,37 +422,106 @@ class EdgeRAGIndex:
             return None
         cl.ids = np.delete(cl.ids, pos)
         cl.char_count -= self._chunk_chars.pop(int(chunk_id), 0)
+        cl.generation += 1
         del self._chunk_cluster[int(chunk_id)]
         cl.gen_latency_est = self.cost.embed_latency(cl.char_count)
         self.cache.invalidate(cid)
-        if cl.stored:
+        ops = []
+        if cl.char_count > self.split_max_chars:
+            # a cluster oversized since build (build never splits) heals on
+            # first touch, keeping the split bound a true invariant for
+            # every mutated cluster; the split supersedes any restore/drop
+            # (it re-persists its parts per Alg. 1 itself)
+            ops.append((OP_SPLIT, cid))
+        elif cl.stored:
             if cl.gen_latency_est <= self.slo_s:
-                # cheap again: drop the stored copy entirely (async in
-                # the paper; synchronous here)
-                self.storage.delete(cid)
-                cl.stored = False
+                # cheap again: drop the stored copy entirely (deferred mode
+                # finally does this "async in the paper" work off-path)
+                ops.append((OP_DROP_STORE, cid))
             else:
-                self._restore_cluster(cid)
+                ops.append((OP_RESTORE, cid))
         if 0 < cl.size < self.merge_min_size:
-            self._merge_cluster(cid)
+            ops.append((OP_MERGE, cid))
+        self._dispatch_maintenance(ops)
         return cid
 
-    # ---- maintenance helpers ----
+    # ---- maintenance helpers (shared by sync mode and the scheduler) ----
+    def _dispatch_maintenance(self, ops):
+        """Run follow-up work inline (sync mode) or queue it (deferred).
+        Sync split finishes the whole cascade now; the scheduler budgets
+        split follow-ups across drains instead."""
+        sync_apply = {OP_RESTORE: self._restore_cluster,
+                      OP_DROP_STORE: self._drop_stored,
+                      OP_SPLIT: self._split_cluster,
+                      OP_MERGE: self._merge_cluster}
+        for kind, cid in ops:
+            if self.maintenance_mode == "sync":
+                sync_apply[kind](cid)
+            else:
+                self.maintenance.enqueue(kind, cid)
+
     def _regen_embeddings(self, cid: int) -> np.ndarray:
         return self.resolver.regenerate([cid])[0]
 
     def _restore_cluster(self, cid: int):
         embs = self._regen_embeddings(cid)
+        cl = self.clusters[cid]
+        cl.generation += 1              # storage state is cluster state
         self.storage.put(cid, embs)
-        self.clusters[cid].stored = True
+        cl.stored = True
+        cl.stored_generation = cl.generation
+
+    def _drop_stored(self, cid: int):
+        """The inverse of a restore: the cluster became cheap to regenerate,
+        so its storage copy is dead weight."""
+        cl = self.clusters[cid]
+        cl.generation += 1
+        self.storage.delete(cid)
+        cl.stored = False
+        cl.stored_generation = -1
+
+    def _reconcile_storage(self, cid: int):
+        """Make the Alg. 1 invariant true for one cluster: (re)store it if
+        regeneration is over-SLO and the copy is missing/stale, drop the
+        copy if it became cheap.  The fallback when a split that superseded
+        a restore turns out to be degenerate."""
+        cl = self.clusters[cid]
+        if not cl.active or cl.size == 0:
+            if cl.stored:
+                self._drop_stored(cid)
+            return
+        if self.store_heavy and cl.gen_latency_est > self.slo_s:
+            if not (cl.storage_fresh and cid in self.storage):
+                self._restore_cluster(cid)
+        elif cl.stored:
+            self._drop_stored(cid)
 
     def _split_cluster(self, cid: int):
-        """Split an oversized cluster into two (k-means k=2 on regenerated
-        embeddings); the new cluster is appended to the first level."""
+        """Split an oversized cluster (k-means k=2 on regenerated
+        embeddings), cascading until every produced part fits
+        ``split_max_chars`` (or is a single un-splittable chunk)."""
+        work = [cid]
+        while work:
+            c = work.pop()
+            produced = self._split_once(c)
+            if not produced:
+                # degenerate split (duplicate embeddings): the cluster
+                # stays oversized, but the storage reconciliation the
+                # split superseded must still happen
+                self._reconcile_storage(c)
+                continue
+            for slot in produced:
+                cl = self.clusters[slot]
+                if cl.char_count > self.split_max_chars and cl.size >= 2:
+                    work.append(slot)
+
+    def _split_once(self, cid: int) -> List[int]:
+        """One split level: replace ``cid`` with part 0, append part 1.
+        Returns the slots written (empty if the split was degenerate)."""
         cl = self.clusters[cid]
         embs = self._regen_embeddings(cid)
         if len(embs) < 2:
-            return
+            return []
         cents, assign = kmeans(embs, 2, iters=10, seed=len(self.clusters))
         texts = self.get_chunks(cl.ids.tolist())
         parts = []
@@ -389,17 +530,21 @@ class EdgeRAGIndex:
             chars = int(sum(len(texts[j]) for j in sel))
             parts.append((cl.ids[sel], chars, embs[sel]))
         if any(len(p[0]) == 0 for p in parts):
-            return
+            return []
         # replace cid with part 0; append part 1
         self.storage.delete(cid)
         self.cache.invalidate(cid)
+        slots = []
+        next_gen = cl.generation + 1    # both parts outlive any plan of cid
         for slot, (ids, chars, sub) in zip(
                 (cid, len(self.clusters)), parts):
             newcl = EdgeCluster(ids=ids, char_count=chars,
-                                gen_latency_est=self.cost.embed_latency(chars))
+                                gen_latency_est=self.cost.embed_latency(chars),
+                                generation=next_gen)
             if self.store_heavy and newcl.gen_latency_est > self.slo_s:
                 self.storage.put(slot, sub)
                 newcl.stored = True
+                newcl.stored_generation = newcl.generation
             if slot == cid:
                 self.clusters[cid] = newcl
                 self.centroids[cid] = cents[0]
@@ -409,38 +554,61 @@ class EdgeRAGIndex:
                     [self.centroids, cents[1:2]])
             for i in newcl.ids:
                 self._chunk_cluster[int(i)] = slot
+            slots.append(slot)
+        return slots
 
-    def _merge_cluster(self, cid: int):
-        """Merge an undersized cluster into its nearest active neighbor."""
-        cl = self.clusters[cid]
-        if self.nlist < 2 or cl.size == 0:
-            return
+    def _merge_target(self, cid: int) -> Optional[int]:
+        """The nearest active neighbor an undersized cluster would merge
+        into (None if no candidate) — shared by the merge itself and the
+        scheduler's cost estimate."""
+        if self.nlist < 2:
+            return None
         mask = np.ones(self.nlist, bool)
         mask[cid] = False
         for j, other in enumerate(self.clusters):
             if not other.active:
                 mask[j] = False
         if not mask.any():
-            return
+            return None
         sims = self.centroids @ self.centroids[cid]
         sims[~mask] = -np.inf
-        tgt = int(np.argmax(sims))
+        return int(np.argmax(sims))
+
+    def _merge_cluster(self, cid: int):
+        """Merge an undersized cluster into its nearest active neighbor."""
+        cl = self.clusters[cid]
+        tgt = self._merge_target(cid)
+        if tgt is None or cl.size == 0:
+            return
         other = self.clusters[tgt]
         other.ids = np.concatenate([other.ids, cl.ids])
         other.char_count += cl.char_count
+        other.generation += 1
         for i in cl.ids:
             self._chunk_cluster[int(i)] = tgt
         other.gen_latency_est = self.cost.embed_latency(other.char_count)
         self.cache.invalidate(tgt)
         self.cache.invalidate(cid)
         self.storage.delete(cid)
-        if other.stored or (self.store_heavy
-                            and other.gen_latency_est > self.slo_s):
+        cl.stored = False               # the copy just deleted is gone
+        cl.stored_generation = -1
+        # absorbing the merged chunks may push the survivor over the split
+        # bound; the dispatched split then supersedes the restore (it
+        # re-persists its parts itself — restoring first would regenerate
+        # and write a copy the split immediately deletes)
+        will_split = (other.char_count > self.split_max_chars
+                      and other.size >= 2)
+        if not will_split and (other.stored
+                               or (self.store_heavy
+                                   and other.gen_latency_est > self.slo_s)):
             self._restore_cluster(tgt)
         cl.active = False
         cl.ids = np.zeros((0,), np.int64)
         cl.char_count = 0
+        cl.generation += 1              # tombstoning invalidates plans too
         self.centroids[cid] = -np.ones(self.dim) / np.sqrt(self.dim)  # bury
+        if will_split:
+            self._dispatch_maintenance([(OP_SPLIT, tgt)])
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
@@ -460,4 +628,6 @@ class EdgeRAGIndex:
             "cache_entries": len(self.cache),
             "cache_hit_rate": self.cache.hit_rate,
             "threshold_s": self.threshold.threshold,
+            "maintenance_pending": len(self.maintenance),
+            "maintenance_edge_s": self.maintenance.total_edge_s,
         }

@@ -73,8 +73,8 @@ def kmeans(x: np.ndarray, k: int, iters: int = 20,
         if len(empties):
             d = np.asarray(pairwise_neg_ip(xj, cj)).min(axis=1)
             far = np.argsort(-d)[:len(empties)]  # least-similar points
-            c_host = np.asarray(cj)
-            c_host[empties] = xn[far]
+            c_host = np.array(cj)      # writable copy (asarray of a jax
+            c_host[empties] = xn[far]  # array is a read-only view)
             cj = jnp.asarray(c_host)
     assign, _ = _assign(xj, cj)
     return np.array(cj), np.array(assign)  # writable host copies

@@ -1,0 +1,249 @@
+"""Generation-stamped online-maintenance subsystem (§5.4 made correct).
+
+Two pieces make index mutation safe to interleave with (pre-planned)
+retrieval:
+
+GENERATION STAMPS.  Every :class:`~repro.core.edgerag.EdgeCluster` carries a
+monotonically increasing ``generation``, bumped by *any* mutation — insert,
+remove, split, merge, restore, stored-copy drop.  A
+:class:`~repro.core.resolver.ResolutionPlan` snapshots the ``(cid,
+generation)`` pair of every planned cluster, and
+:meth:`~repro.core.resolver.ClusterResolver.execute` compares snapshots
+against the live clusters: any mismatch means the payload the plan is about
+to score (a prefetched storage blob, a plan-time cache hit) may describe a
+membership that no longer exists, so the cluster falls back to fresh
+regeneration.  Unlike the older ``len(embs) != size`` guard (kept only as
+defense in depth), generations catch SAME-SIZE mutations — remove-one /
+insert-one, split reassignment — that leave the row count intact but move
+chunks around.  Clusters additionally track ``stored_generation``, the
+generation their storage copy reflects; a stored cluster whose stamps
+disagree is served by regeneration (and re-persisted) instead of loading the
+stale blob.
+
+DEFERRED MAINTENANCE.  The seed executed split / merge / restore
+synchronously inside ``insert`` / ``remove`` ("async in the paper;
+synchronous here").  :class:`MaintenanceScheduler` turns that work into a
+queue of :class:`MaintenanceOp`\\ s: mutations enqueue and return fast, and
+the queue drains *between* serving steps under a per-step edge-cost budget
+(costs modeled through :class:`~repro.core.costs.EdgeCostModel`).  Every op
+is RE-VALIDATED against the cluster's current state at drain time — a queued
+split whose cluster has since shrunk is skipped, a queued restore whose
+cluster became cheap turns into a stored-copy drop — so the queue converges
+to the Alg. 1 invariant (stored ⇔ regeneration cost over SLO) regardless of
+how mutations interleaved.  Deferral never affects correctness: an
+un-restored cluster resolves through regeneration, an un-split cluster is
+merely oversized, an un-merged cluster merely small.  ``drain(None)`` (no
+budget) runs the queue to quiescence, after which the synchronous-mode
+invariants hold exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+OP_RESTORE = "restore"        # (re)generate + persist the storage copy
+OP_DROP_STORE = "drop_store"  # cluster became cheap: delete the stored copy
+OP_SPLIT = "split"            # one k=2 split level (follow-ups re-enqueue)
+OP_MERGE = "merge"            # fold an undersized cluster into its neighbor
+
+
+@dataclasses.dataclass
+class MaintenanceOp:
+    kind: str
+    cid: int
+    generation: int     # cluster generation when enqueued (telemetry)
+
+
+@dataclasses.dataclass
+class MaintenanceReport:
+    """What one :meth:`MaintenanceScheduler.drain` call did."""
+    executed: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+    skipped: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+    edge_s: float = 0.0          # modeled edge seconds spent this drain
+    remaining: int = 0           # ops still queued when the budget ran out
+
+    @property
+    def n_executed(self) -> int:
+        return len(self.executed)
+
+
+class MaintenanceScheduler:
+    """Deferred split / merge / restore queue for an ``EdgeRAGIndex``.
+
+    ``budget_s_per_step`` is the default edge-second budget of one
+    :meth:`drain` call (None = run to quiescence).  A drain always executes
+    at least one runnable op so the queue cannot stall behind a single op
+    larger than the budget.  The queue is keyed by ``(kind, cid)``:
+    re-enqueueing an op refreshes its stamp instead of duplicating it.
+    """
+
+    def __init__(self, index, budget_s_per_step: Optional[float] = None):
+        self.index = index
+        self.budget_s_per_step = budget_s_per_step
+        self._queue: "OrderedDict[Tuple[str, int], MaintenanceOp]" = \
+            OrderedDict()
+        self.total_edge_s = 0.0
+        self.n_executed = 0
+        self.n_skipped = 0
+
+    # ------------------------------------------------------------------
+    # queue
+    # ------------------------------------------------------------------
+    def enqueue(self, kind: str, cid: int):
+        key = (kind, cid)
+        self._queue.pop(key, None)      # refresh: move to the back
+        self._queue[key] = MaintenanceOp(
+            kind, cid, self.index.clusters[cid].generation)
+
+    def clear(self):
+        """Drop every queued op (index rebuilds)."""
+        self._queue.clear()
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def pending(self) -> List[MaintenanceOp]:
+        return list(self._queue.values())
+
+    # ------------------------------------------------------------------
+    # cost model
+    # ------------------------------------------------------------------
+    def estimate_cost_s(self, kind: str, cid: int) -> float:
+        """Modeled edge seconds of one op.  Regeneration dominates restore /
+        split / merge; storage writes are charged at the sequential-read
+        bandwidth (the cost model has no separate write channel); a split
+        adds ~10 Lloyd iterations of 2-means over the cluster."""
+        ix = self.index
+        cl = ix.clusters[cid]
+        cost = ix.cost
+        put_s = cost.storage_load_latency(cl.size * ix.dim * 4)
+        if kind == OP_DROP_STORE:
+            return cost.storage_seek_s
+        if kind == OP_RESTORE:
+            return cost.embed_latency(cl.char_count) + put_s
+        if kind == OP_SPLIT:
+            kmeans_s = 10 * 2 * cost.search_latency(cl.size, ix.dim)
+            return cost.embed_latency(cl.char_count) + kmeans_s + put_s
+        if kind == OP_MERGE:
+            # when the merge triggers a restore it regenerates the MERGED
+            # text — the surviving neighbor's chars dominate, so bill them
+            base = cost.search_latency(ix.nlist, ix.dim)
+            tgt = ix._merge_target(cid)
+            if tgt is None:
+                return base
+            other = ix.clusters[tgt]
+            merged_chars = cl.char_count + other.char_count
+            if other.stored or (ix.store_heavy
+                                and cost.embed_latency(merged_chars)
+                                > ix.slo_s):
+                base += (cost.embed_latency(merged_chars)
+                         + cost.storage_load_latency(
+                             (cl.size + other.size) * ix.dim * 4))
+            return base
+        raise ValueError(f"unknown maintenance op kind: {kind}")
+
+    # ------------------------------------------------------------------
+    # drain
+    # ------------------------------------------------------------------
+    def _revalidate(self, op: MaintenanceOp) -> Optional[str]:
+        """The op kind the cluster's CURRENT state calls for (None = the op
+        is no longer needed).  restore / drop_store reconcile to whichever
+        direction Alg. 1 wants now, whatever was queued — and so does a
+        split whose cluster shrank back under the bound (a split supersedes
+        the restore at enqueue time, so the storage reconciliation it
+        absorbed must not vanish with it)."""
+        ix = self.index
+        cl = ix.clusters[op.cid]
+        if op.kind == OP_MERGE:
+            if (cl.active and 0 < cl.size < ix.merge_min_size
+                    and ix.nlist >= 2):
+                return OP_MERGE
+            return None
+        oversized = (cl.active and cl.size >= 2
+                     and cl.char_count > ix.split_max_chars)
+        if op.kind == OP_SPLIT and oversized:
+            return OP_SPLIT
+        # restore / drop_store — or a split no longer needed: reconcile
+        # the storage copy with Alg. 1
+        if oversized:
+            # an oversized cluster always has a split queued (any mutation
+            # that saw it oversized enqueued one), and the split
+            # re-persists its parts itself — restoring first would be
+            # thrown away
+            return None
+        want_stored = (cl.active and cl.size > 0 and ix.store_heavy
+                       and cl.gen_latency_est > ix.slo_s)
+        if want_stored:
+            fresh = (cl.stored and cl.stored_generation == cl.generation
+                     and op.cid in ix.storage)
+            return None if fresh else OP_RESTORE
+        return OP_DROP_STORE if cl.stored else None
+
+    def _apply(self, kind: str, cid: int):
+        ix = self.index
+        if kind == OP_RESTORE:
+            ix._restore_cluster(cid)
+        elif kind == OP_DROP_STORE:
+            ix._drop_stored(cid)
+        elif kind == OP_SPLIT:
+            produced = ix._split_once(cid)
+            if not produced:
+                # degenerate split: still reconcile the storage copy the
+                # split superseded at enqueue time
+                ix._reconcile_storage(cid)
+            for slot in produced:
+                cl = ix.clusters[slot]
+                if cl.char_count > ix.split_max_chars and cl.size >= 2:
+                    self.enqueue(OP_SPLIT, slot)    # budgeted follow-up
+        elif kind == OP_MERGE:
+            ix._merge_cluster(cid)
+
+    def drain(self, budget_s: Optional[float] = None,
+              strict: bool = False) -> MaintenanceReport:
+        """Run queued ops until the queue is empty or the budget is spent.
+
+        ``budget_s`` overrides ``budget_s_per_step``; None on both means run
+        to quiescence.  Skipped (re-validated-away) ops are free.
+
+        By default a drain always executes at least one runnable op, so a
+        single op larger than the budget cannot stall the queue forever.
+        ``strict=True`` inverts that: no op whose estimate overruns the
+        remaining budget runs (FIFO order — the drain stops at the first
+        unaffordable op).  Strict drains model maintenance that must fit an
+        idle window exactly (e.g. the gap before the next known arrival);
+        oversized ops wait for a deeper idle period or an unbudgeted drain.
+        """
+        if budget_s is None:
+            budget_s = self.budget_s_per_step
+        report = MaintenanceReport()
+        while self._queue:
+            key, op = next(iter(self._queue.items()))
+            kind = self._revalidate(op)
+            if kind is None:
+                del self._queue[key]
+                report.skipped.append((op.kind, op.cid))
+                self.n_skipped += 1
+                continue
+            est = self.estimate_cost_s(kind, op.cid)
+            if (budget_s is not None and (strict or report.executed)
+                    and report.edge_s + est > budget_s):
+                break                      # budget spent (≥1 op ran unless strict)
+            del self._queue[key]
+            self._apply(kind, op.cid)
+            report.executed.append((kind, op.cid))
+            report.edge_s += est
+            self.n_executed += 1
+        report.remaining = len(self._queue)
+        self.total_edge_s += report.edge_s
+        return report
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        return {
+            "pending": len(self._queue),
+            "executed": self.n_executed,
+            "skipped": self.n_skipped,
+            "total_edge_s": self.total_edge_s,
+        }

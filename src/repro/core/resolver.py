@@ -26,6 +26,17 @@ mode, and the serving engine's prefetch hook):
            execute (e.g. a deleted cluster file) falls back to regeneration
            instead of crashing.
 
+STALENESS (core/maintenance.py): the plan snapshots every planned cluster's
+``generation`` stamp.  At execute time, any cluster whose generation moved —
+an insert, remove, split, merge, restore or stored-copy drop landed between
+plan and execution — abandons its planned payload and regenerates over the
+cluster's CURRENT membership (clusters merged away resolve to zero rows and
+drop out of scoring).  Generations catch same-size mutations; the old
+row-count compare is kept only as defense in depth against direct mutators
+that forgot to bump.  Stored clusters are additionally only loadable while
+``stored_generation == generation`` — a stale or vanished copy is bypassed,
+regenerated, and re-persisted (the Alg. 1 self-heal).
+
 The fp32 tier is bit-identical to the pre-refactor inlined logic: the same
 state mutations happen in the same order (cache access per unique cluster at
 plan time, inserts after regeneration, per-field latency accumulation in
@@ -60,9 +71,18 @@ class ResolutionPlan:
     cached: Dict[int, np.ndarray]        # cache tier: plan-time lookups
     regen_groups: List[List[int]]        # one coalesced embed call per group
     restore: List[int] = dataclasses.field(default_factory=list)
-    # ^ regen-tier clusters whose storage copy vanished out-of-band:
-    #   execution re-persists them (the Alg. 1 self-heal)
+    # ^ regen-tier clusters whose storage copy vanished or went stale
+    #   out-of-band: execution re-persists them (the Alg. 1 self-heal)
+    generations: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # ^ plan-time generation stamp per planned cluster; execute() treats any
+    #   mismatch with the live cluster as a stale plan entry
     prefetched: Optional[Dict[int, np.ndarray]] = None  # early storage loads
+
+    def fresh(self, cid: int, cluster) -> bool:
+        """True iff ``cluster`` has not mutated since this plan was made
+        (missing snapshot = plan predates generation stamps: trust it)."""
+        return self.generations.get(cid, cluster.generation) \
+            == cluster.generation
 
     @property
     def regen_clusters(self) -> List[int]:
@@ -101,12 +121,14 @@ class ClusterResolver:
         for cid in owner:
             cl = ix.clusters[cid]
             if cl.stored:
-                if cid in ix.storage:
+                if cl.storage_fresh and cid in ix.storage:
                     tier[cid] = TIER_STORAGE
                     storage_clusters.append(cid)
                     continue
-                # storage copy vanished out-of-band: regenerate AND
-                # re-persist (same recovery as an execute-time vanish)
+                # storage copy vanished out-of-band, or went stale behind a
+                # mutation (deferred maintenance hasn't restored it yet):
+                # regenerate AND re-persist (same recovery as an
+                # execute-time vanish)
                 tier[cid] = TIER_REGEN
                 pending.append(cid)
                 restore.append(cid)
@@ -122,7 +144,8 @@ class ClusterResolver:
             probed_per_q=[list(p) for p in probed_per_q],
             owner=owner, tier=tier, storage_clusters=storage_clusters,
             cached=cached, regen_groups=self._coalesce(pending),
-            restore=restore)
+            restore=restore,
+            generations={cid: ix.clusters[cid].generation for cid in owner})
 
     def _coalesce(self, pending: List[int]) -> List[List[int]]:
         if not pending:
@@ -172,7 +195,7 @@ class ClusterResolver:
         ix = self.index
         resolved: Dict[int, np.ndarray] = {}
         regen_groups = [list(g) for g in plan.regen_groups]
-        fallback: List[int] = []      # storage keys gone since plan time
+        fallback: List[int] = []      # stale / vanished since plan time
         if plan.storage_clusters:
             if plan.prefetched is not None:
                 loaded = [plan.prefetched.get(c)
@@ -180,10 +203,18 @@ class ClusterResolver:
             else:
                 loaded = ix.storage.get_many(plan.storage_clusters)
             for cid, embs in zip(plan.storage_clusters, loaded):
-                # a key deleted (or a cluster mutated) since plan/prefetch
-                # time falls back to regeneration instead of crashing or
-                # scoring stale rows
-                if embs is None or len(embs) != ix.clusters[cid].size:
+                # Staleness guard: a prefetched payload is only scoreable if
+                # the cluster's generation never moved after the plan; an
+                # execute-time load only if the storage copy reflects the
+                # CURRENT generation (a sync restore may have refreshed it
+                # after the plan went stale).  Either failure — or a deleted
+                # key, or a row-count mismatch (defense in depth) — falls
+                # back to regeneration instead of crashing or scoring stale
+                # ids.
+                cl = ix.clusters[cid]
+                fresh = (plan.fresh(cid, cl) if plan.prefetched is not None
+                         else cl.storage_fresh)
+                if embs is None or not fresh or len(embs) != cl.size:
                     fallback.append(cid)
                     continue
                 try:
@@ -200,9 +231,11 @@ class ClusterResolver:
                 lat.n_storage_loads += 1
                 resolved[cid] = embs
         for cid, embs in plan.cached.items():
-            # same staleness guard as the storage tier: a cluster mutated
-            # since plan time would misalign the scoring id map
-            if len(embs) != ix.clusters[cid].size:
+            # generation guard (same-size mutations included) + row-count
+            # defense: a cluster mutated since plan time would misalign the
+            # scoring id map
+            cl = ix.clusters[cid]
+            if not plan.fresh(cid, cl) or len(embs) != cl.size:
                 ix.cache.invalidate(cid)   # don't let the stale entry recur
                 fallback.append(cid)
                 continue
@@ -215,25 +248,37 @@ class ClusterResolver:
             regen_groups.append(fallback)
         heal = set(fallback) | set(plan.restore)
         for group in regen_groups:
+            # clusters merged away (or emptied) since plan time have no
+            # text to regenerate: they resolve to zero rows and drop out
+            # of scoring
+            dead = [c for c in group if not (ix.clusters[c].active
+                                             and ix.clusters[c].size > 0)]
+            for c in dead:
+                resolved[c] = np.zeros((0, ix.dim), np.float32)
+            group = [c for c in group if c not in dead]
+            if not group:
+                continue
             for cid, sub, chars in self._regen_group(group):
-                healed = cid in heal and ix.clusters[cid].stored
-                if healed:
+                cl = ix.clusters[cid]
+                if (cl.stored and cid in heal
+                        and (not cl.storage_fresh or cid not in ix.storage)):
                     # self-heal the vanished/stale storage copy so later
                     # batches load instead of regenerating forever
                     ix.storage.put(cid, sub.copy())
+                    cl.stored_generation = cl.generation
                 gen_s = ix.cost.embed_latency(chars)
                 qi = plan.owner[cid]
                 lats[qi].l2_generate_s += gen_s
                 lats[qi].n_generated += 1
                 lats[qi].chars_embedded += chars
                 missed[qi] = True
-                ix.clusters[cid].gen_latency_est = gen_s
-                if not healed:
+                cl.gen_latency_est = gen_s
+                if not cl.stored:
                     # copy: a view into the group's matrix would pin the
                     # whole group in the cache and break its byte accounting.
-                    # (Healed clusters skip the cache: plan() always serves
-                    # stored clusters from the storage tier, so a cached
-                    # copy would be dead weight.)
+                    # (Stored clusters skip the cache: plan() always serves
+                    # fresh stored clusters from the storage tier, so a
+                    # cached copy would be dead weight.)
                     ix.cache.insert(
                         cid, sub.copy(), gen_s,
                         min_latency_threshold=ix.threshold.threshold)

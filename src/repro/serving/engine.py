@@ -32,6 +32,9 @@ class RAGResponse:
     ttft_wall_s: float
     decode_wall_s: float = 0.0
     prefetch_saved_s: float = 0.0    # edge seconds hidden by prefetch overlap
+    maintenance_s: float = 0.0       # deferred-maintenance edge seconds the
+    #                                  batch drained after decode (amortized;
+    #                                  off the TTFT critical path)
 
 
 class RAGEngine:
@@ -39,13 +42,17 @@ class RAGEngine:
 
     def __init__(self, index, generator=None, *,
                  cost_model: Optional[EdgeCostModel] = None,
-                 k: int = 10, nprobe: int = 8, max_new_tokens: int = 16):
+                 k: int = 10, nprobe: int = 8, max_new_tokens: int = 16,
+                 maintenance_budget_s: Optional[float] = None):
         self.index = index
         self.generator = generator        # GeneratorModel or None (sim-only)
         self.cost = cost_model or EdgeCostModel()
         self.k = k
         self.nprobe = nprobe
         self.max_new_tokens = max_new_tokens
+        # per-step budget for draining the index's deferred-maintenance
+        # queue after decode (None = the scheduler's own default)
+        self.maintenance_budget_s = maintenance_budget_s
 
     def answer_batch(self, queries: Sequence[str], query_embs: np.ndarray,
                      get_chunks: Callable[[Sequence[int]], List[str]],
@@ -106,6 +113,14 @@ class RAGEngine:
                     p, self.max_new_tokens)
             decode_wall = (time.perf_counter() - t1) / nq
 
+        # deferred index maintenance drains AFTER decode — split / merge /
+        # restore work queued by online inserts/removes runs between serving
+        # steps instead of inside a query's TTFT window
+        maintenance_s = 0.0
+        sched = getattr(self.index, "maintenance", None)
+        if sched is not None and len(sched):
+            maintenance_s = sched.drain(self.maintenance_budget_s).edge_s
+
         responses = []
         for qi in range(nq):
             n_prompt_tokens = max(1, len(prompts[qi]) // 3)
@@ -124,7 +139,8 @@ class RAGEngine:
                 ttft_edge_s=retrieval_edge - saved + prefill_edge,
                 ttft_wall_s=retrieval_wall / nq,
                 decode_wall_s=decode_wall,
-                prefetch_saved_s=saved))
+                prefetch_saved_s=saved,
+                maintenance_s=maintenance_s / nq))
         return responses
 
     def answer(self, query: str, query_emb: np.ndarray,

@@ -39,6 +39,7 @@ class RequestScheduler:
         self._queue: List[Request] = []
         self.completed: List[Request] = []
         self._next_rid = 0
+        self.maintenance_s = 0.0     # total deferred-maintenance seconds
 
     def submit(self, arrival_s: float, query: str = "", query_emb=None,
                query_chars: int = 0, slo_s: float = 1.0) -> Request:
@@ -49,11 +50,24 @@ class RequestScheduler:
         heapq.heappush(self._queue, req)
         return req
 
-    def run(self, serve_fn: Callable[[Request], float]) -> List[Request]:
+    def run(self, serve_fn: Callable[[Request], float],
+            maintenance_fn: Optional[Callable[[Optional[float]], float]]
+            = None) -> List[Request]:
         """Drain the queue; serve_fn returns the service time in seconds.
 
         The device is serially occupied (edge device: one query at a time);
         queueing delay accrues when arrivals outpace service.
+
+        ``maintenance_fn`` (deferred index maintenance, wrapping
+        ``MaintenanceScheduler.drain``) models background work that YIELDS
+        to foreground requests: it only runs when the device goes idle — no
+        request waiting at the current clock — and receives the idle gap
+        until the next known arrival (None when the queue is empty) so it
+        can size its work to fit (a strict-budget drain).  It returns the
+        modeled seconds it occupied the device; work that fits the gap is
+        free, overrun delays the next request by the overrun only.  Under
+        sustained backlog maintenance keeps deferring — exactly the
+        sync-vs-deferred trade-off the online-churn benchmark measures.
         """
         clock = 0.0
         while self._queue:
@@ -64,6 +78,13 @@ class RequestScheduler:
             clock += service_s
             req.finish_s = clock
             self.completed.append(req)
+            if maintenance_fn is not None:
+                nxt = self._queue[0].arrival_s if self._queue else None
+                if nxt is None or nxt > clock:       # device idle: drain
+                    gap = None if nxt is None else nxt - clock
+                    m = float(maintenance_fn(gap))
+                    self.maintenance_s += m
+                    clock += m
         return self.completed
 
     def slo_hit_rate(self) -> float:

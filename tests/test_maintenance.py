@@ -1,0 +1,560 @@
+"""Generation-stamped maintenance subsystem (core/maintenance.py):
+plan staleness by generation compare (same-size mutations included),
+budget-bounded deferred draining, probe behavior on merge-heavy indexes,
+the §5.4 bugfixes (insert assignment, merge stored-flag, post-split insert
+return), and property-style churn invariants over the Table-4 configs."""
+import numpy as np
+import pytest
+
+from repro.core import EdgeCostModel, EdgeRAGIndex
+from repro.core.maintenance import (OP_MERGE, OP_RESTORE, OP_SPLIT,
+                                    MaintenanceScheduler)
+from repro.data import generate_dataset
+from repro.data.embedder import TableEmbedder
+from repro.serving.engine import RAGEngine
+from repro.serving.scheduler import RequestScheduler
+
+pytestmark = pytest.mark.fast
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return generate_dataset(n_records=500, dim=32, n_topics=16,
+                            n_queries=24, seed=5)
+
+
+def _fresh(ds, **kw):
+    kw.setdefault("slo_s", 0.15)
+    er = EdgeRAGIndex(32, ds.embedder, ds.get_chunks, EdgeCostModel(), **kw)
+    er.build(ds.chunk_ids, ds.texts, nlist=16, embeddings=ds.embeddings,
+             seed=1)
+    return er
+
+
+def _mk_chunk(ds, next_id, near_emb, rng, n_words=20):
+    emb = near_emb + 0.03 * rng.standard_normal(len(near_emb))
+    emb = (emb / np.linalg.norm(emb)).astype(np.float32)
+    text = f"doc-{next_id} " + "tok " * n_words
+    ds.add_chunk(next_id, text, emb)
+    return text, emb
+
+
+def _check_invariants(er, *, quiescent=True):
+    """The §5.4 correctness contract: map bijection, char accounting,
+    storage consistency, and (at quiescence) Alg. 1 + the split bound."""
+    live = []
+    for cid, cl in enumerate(er.clusters):
+        if not cl.active:
+            assert cl.size == 0 and cl.char_count == 0
+            assert not cl.stored, f"tombstoned {cid} still flagged stored"
+            assert cid not in er.storage
+            continue
+        ids = [int(i) for i in cl.ids]
+        live.extend(ids)
+        assert len(set(ids)) == len(ids)
+        for i in ids:
+            assert er._chunk_cluster[i] == cid
+        assert cl.char_count == sum(er._chunk_chars[i] for i in ids)
+        if cl.stored:
+            assert cid in er.storage
+        if quiescent:
+            assert cl.stored == (er.store_heavy
+                                 and cl.gen_latency_est > er.slo_s), cid
+            # split bound: any MUTATED cluster fits (build never splits, so
+            # generation-0 clusters may be born oversized and heal on touch)
+            assert (cl.char_count <= er.split_max_chars or cl.size <= 1
+                    or cl.generation == 0), cid
+    assert sorted(live) == sorted(er._chunk_cluster)
+    assert er.ntotal == len(er._chunk_cluster)
+
+
+# ----------------------------------------------------------------------
+# generation stamps
+# ----------------------------------------------------------------------
+def test_generation_bumps_on_mutations(ds):
+    er = _fresh(ds, slo_s=0.05)
+    cid = er._chunk_cluster[int(ds.chunk_ids[0])]
+    g0 = er.clusters[cid].generation
+    nid = 600_000
+    text, _ = _mk_chunk(ds, nid, er.centroids[cid], np.random.default_rng(0))
+    assert er.insert(nid, text) == cid
+    assert er.clusters[cid].generation > g0          # insert (+ restore)
+    g1 = er.clusters[cid].generation
+    er.remove(nid)
+    assert er.clusters[cid].generation > g1
+    # restore keeps the storage stamp in sync with the cluster stamp
+    for cl in er.clusters:
+        if cl.stored:
+            assert cl.stored_generation == cl.generation
+
+
+def test_stale_cached_plan_same_size_mutation(ds):
+    """Acceptance: a plan whose cached payload predates a SAME-SIZE mutation
+    (remove one + insert one) regenerates instead of scoring stale ids —
+    the old row-count guard cannot see this."""
+    er = _fresh(ds, store_heavy=False, cache_bytes=8 << 20)
+    er.search_batch(ds.query_embs[:6], 10, 5)        # populate the cache
+    plan = er.plan_batch(ds.query_embs[:6], 5)
+    assert plan.cached
+    victim = next(c for c in plan.cached if er.clusters[c].size >= 3)
+    size0 = er.clusters[victim].size
+    gone = int(er.clusters[victim].ids[0])
+    er.remove(gone)
+    nid = 610_000
+    text, _ = _mk_chunk(ds, nid, er.centroids[victim],
+                        np.random.default_rng(1))
+    assert er.insert(nid, text) == victim
+    assert er.clusters[victim].size == size0         # same-size mutation
+    ids, vals, lats = er.search_batch(ds.query_embs[:6], 10, 5, plan=plan)
+    f_ids, f_vals, _ = er.search_batch(ds.query_embs[:6], 10, 5)
+    assert np.array_equal(ids, f_ids)
+    assert np.array_equal(vals, f_vals)
+    assert gone not in set(ids.ravel().tolist())
+    assert sum(l.n_generated for l in lats) >= 1     # victim regenerated
+
+
+def test_prefetched_plan_survives_insert_and_remove(ds):
+    """Acceptance: a plan prefetched before an insert/remove of a probed
+    STORED cluster executes without crashing or scoring stale rows, even
+    though a synchronous restore refreshed the storage copy after the
+    prefetch."""
+    er = _fresh(ds, slo_s=0.05, cache_bytes=0)
+    plan = er.plan_batch(ds.query_embs[:6], 5, prefetch_storage=True)
+    assert plan.storage_clusters and plan.prefetched
+    victim = next(c for c in plan.storage_clusters
+                  if er.clusters[c].size >= 3)
+    gone = int(er.clusters[victim].ids[0])
+    er.remove(gone)
+    nid = 620_000
+    text, _ = _mk_chunk(ds, nid, er.centroids[victim],
+                        np.random.default_rng(2))
+    assert er.insert(nid, text) == victim
+    ids, vals, lats = er.search_batch(ds.query_embs[:6], 10, 5, plan=plan)
+    f_ids, f_vals, _ = er.search_batch(ds.query_embs[:6], 10, 5)
+    assert np.array_equal(ids, f_ids)
+    assert np.array_equal(vals, f_vals)
+    assert gone not in set(ids.ravel().tolist())
+
+
+def test_stale_plan_survives_split_and_merge(ds):
+    """A probed cluster split (or merged away) between plan and execute
+    resolves over its current membership — merged-away clusters drop to
+    zero rows instead of crashing the scorer."""
+    er = _fresh(ds, slo_s=10.0, store_heavy=False, cache_bytes=0,
+                split_max_chars=20_000, merge_min_size=2)
+    plan = er.plan_batch(ds.query_embs[:4], 4)
+    probed = sorted({c for p in plan.probed_per_q for c in p})
+    assert len(probed) >= 2
+    # split: balloon one probed cluster over the limit
+    fat = probed[0]
+    nid = 630_000
+    rng = np.random.default_rng(3)
+    text, _ = _mk_chunk(ds, nid, er.centroids[fat], rng, n_words=6000)
+    er.insert(nid, text)
+    assert er.nlist > 16                              # split appended
+    # merge: drain another probed cluster until it tombstones
+    small = probed[-1]
+    while er.clusters[small].active and er.clusters[small].size > 0:
+        er.remove(int(er.clusters[small].ids[0]))
+    ids, _, _ = er.search_batch(ds.query_embs[:4], 10, 4, plan=plan)
+    live = set(er._chunk_cluster)
+    assert all(int(i) in live for i in ids.ravel() if i >= 0)
+    _check_invariants(er)
+
+
+# ----------------------------------------------------------------------
+# deferred maintenance
+# ----------------------------------------------------------------------
+def test_budget_bounded_draining(ds):
+    er = _fresh(ds, slo_s=0.02, maintenance="deferred",
+                split_max_chars=8_000, merge_min_size=2)
+    rng = np.random.default_rng(4)
+    nid = 640_000
+    for k in range(40):
+        text, _ = _mk_chunk(ds, nid, ds.embeddings[rng.integers(ds.n)], rng,
+                            n_words=int(rng.integers(5, 120)))
+        er.insert(nid, text)
+        nid += 1
+    assert len(er.maintenance) > 1
+    rep = er.maintenance.drain(1e-9, strict=True)    # strict: nothing fits
+    assert rep.n_executed == 0
+    assert rep.remaining > 0
+    rep = er.maintenance.drain(1e-9)                 # tiny budget
+    assert rep.n_executed == 1                       # ≥1 op always runs
+    assert rep.remaining > 0
+    drains = 0
+    while len(er.maintenance):
+        rep = er.maintenance.drain(0.5)
+        assert rep.edge_s <= 0.5 or rep.n_executed == 1
+        drains += 1
+        assert drains < 500
+    _check_invariants(er, quiescent=True)
+    st = er.maintenance.stats()
+    assert st["executed"] >= 1 and st["total_edge_s"] > 0
+
+
+def test_deferred_matches_sync_at_quiescence(ds):
+    """The same mutation stream through sync and deferred maintenance ends
+    with the same live corpus and the same quiescent invariants."""
+    sync = _fresh(ds, slo_s=0.05, split_max_chars=10_000, merge_min_size=2)
+    defer = _fresh(ds, slo_s=0.05, split_max_chars=10_000, merge_min_size=2,
+                   maintenance="deferred")
+    rng = np.random.default_rng(5)
+    nid = 650_000
+    for k in range(60):
+        if rng.random() < 0.5:
+            text, _ = _mk_chunk(ds, nid, ds.embeddings[rng.integers(ds.n)],
+                                rng, n_words=int(rng.integers(5, 200)))
+            sync.insert(nid, text)
+            defer.insert(nid, text)
+            nid += 1
+        else:
+            victim = int(rng.choice(sorted(sync._chunk_cluster)))
+            assert (sync.remove(victim) is None) == \
+                (defer.remove(victim) is None)
+    defer.maintenance.drain(None)                    # run to quiescence
+    assert len(defer.maintenance) == 0
+    assert sorted(sync._chunk_cluster) == sorted(defer._chunk_cluster)
+    _check_invariants(sync, quiescent=True)
+    _check_invariants(defer, quiescent=True)
+    for er in (sync, defer):
+        ids, _, _ = er.search(ds.query_embs[0], 10, 8)
+        assert all(int(i) in er._chunk_cluster for i in ids[0] if i >= 0)
+
+
+def test_deferred_search_correct_with_pending_ops(ds):
+    """Queries between mutation and drain see correct (current-membership)
+    results: un-restored clusters regenerate, stale storage is bypassed."""
+    er = _fresh(ds, slo_s=0.05, cache_bytes=0, maintenance="deferred")
+    ref = _fresh(ds, slo_s=0.05, cache_bytes=0)
+    rng = np.random.default_rng(6)
+    nid = 660_000
+    for k in range(10):
+        text, _ = _mk_chunk(ds, nid, ds.embeddings[rng.integers(ds.n)], rng)
+        er.insert(nid, text)
+        ref.insert(nid, text)
+        nid += 1
+    assert len(er.maintenance) > 0                   # restores still queued
+    ids, vals, _ = er.search_batch(ds.query_embs[:8], 10, 5)
+    r_ids, r_vals, _ = ref.search_batch(ds.query_embs[:8], 10, 5)
+    assert np.array_equal(ids, r_ids)
+    assert np.array_equal(vals, r_vals)
+
+
+def test_engine_drains_after_decode(ds):
+    er = _fresh(ds, slo_s=0.05, maintenance="deferred")
+    rng = np.random.default_rng(7)
+    nid = 670_000
+    for k in range(6):
+        text, _ = _mk_chunk(ds, nid, ds.embeddings[rng.integers(ds.n)], rng)
+        er.insert(nid, text)
+        nid += 1
+    assert len(er.maintenance) > 0
+    eng = RAGEngine(er, None, k=5, nprobe=4)
+    out = eng.answer_batch(["q0", "q1"], ds.query_embs[:2], ds.get_chunks)
+    assert len(er.maintenance) == 0                  # drained post-decode
+    assert out[0].maintenance_s > 0
+    # maintenance is off the TTFT critical path
+    assert out[0].ttft_edge_s == pytest.approx(
+        out[0].retrieval.retrieval_s + out[0].prefill_edge_s)
+
+
+def test_request_scheduler_maintenance_hook():
+    sched = RequestScheduler()
+    for arrival in (0.0, 10.0, 10.1):
+        sched.submit(arrival)
+    gaps = []
+
+    def maintenance(gap_s):
+        gaps.append(gap_s)
+        return 5.0
+
+    done = sched.run(lambda r: 1.0, maintenance_fn=maintenance)
+    # r0: 0→1, idle until 10 → maintenance runs 1→6 (fully hidden),
+    #     and is told the 9 s gap so it can size its drain to fit
+    # r1: 10→11; r2 already waiting (10.1) → maintenance YIELDS
+    # r2: 11→12; queue empty → maintenance runs 12→17 (gap None)
+    assert done[0].latency_s == pytest.approx(1.0)
+    assert done[1].latency_s == pytest.approx(1.0)
+    assert done[2].latency_s == pytest.approx(12.0 - 10.1)
+    assert sched.maintenance_s == pytest.approx(10.0)
+    assert gaps == [pytest.approx(9.0), None]
+
+
+# ----------------------------------------------------------------------
+# §5.4 bugfixes (satellites)
+# ----------------------------------------------------------------------
+def test_probe_fills_nprobe_on_merge_heavy_index(ds):
+    """Tombstoned centroids must not crowd live clusters out of the probe
+    set: after heavy merging every query still probes min(nprobe, live)."""
+    er = _fresh(ds, slo_s=10.0, store_heavy=False, cache_bytes=0,
+                merge_min_size=3)
+    victims = [cid for cid, c in enumerate(er.clusters) if c.size >= 3]
+    for cid in victims[:8]:                          # merge 8 clusters away
+        while er.clusters[cid].active and er.clusters[cid].size > 0:
+            er.remove(int(er.clusters[cid].ids[0]))
+    n_dead = sum(not c.active for c in er.clusters)
+    assert n_dead >= 4
+    n_live = sum(1 for c in er.clusters if c.active and c.size > 0)
+    nprobe = 8
+    _, _, lats = er.search_batch(ds.query_embs, 10, nprobe)
+    for lat in lats:
+        assert lat.n_clusters_probed == min(nprobe, n_live)
+    _check_invariants(er)
+
+
+def test_insert_assigns_by_raw_ip_unnormalized_embedder():
+    """Insert uses the same un-normalized IP assignment as build/probe, so
+    a non-unit-norm embedder cannot land chunks in clusters the chunk's own
+    embedding never probes."""
+    rng = np.random.default_rng(9)
+    dim, n = 16, 80
+    embs = (rng.standard_normal((n, dim)) * 5.0).astype(np.float32)
+    table = {i: embs[i] for i in range(n)}
+    store = {i: f"doc-{i} body text" for i in range(n)}
+    er = EdgeRAGIndex(
+        dim, TableEmbedder(table, dim),
+        lambda ids: [store[int(i)] for i in ids],
+        EdgeCostModel(), slo_s=10.0, store_heavy=False, cache_bytes=0)
+    er.build(list(range(n)), [store[i] for i in range(n)], nlist=8,
+             embeddings=embs, seed=0)
+    for nid, scale in ((200, 7.3), (201, 0.02)):
+        new = (rng.standard_normal(dim) * scale).astype(np.float32)
+        table[nid] = new
+        store[nid] = f"doc-{nid} fresh"
+        cid = er.insert(nid, store[nid])
+        # assignment == what a probe with the chunk's own raw embedding
+        # sees, at ANY norm: nprobe=1 probes exactly the home cluster
+        assert cid == int(np.argmax(er.centroids @ new))
+        probed = er._probe(new[None], 1)[0]
+        assert probed == [cid]
+    # at a dominant norm the chunk is also retrieved outright
+    ids, _, _ = er.search(table[200], 5, 1)
+    assert 200 in ids[0].tolist()
+
+
+def test_insert_never_lands_in_tombstoned_cluster(ds):
+    """Buried tombstone centroids can outrank every live centroid (the
+    _probe premise); insert must mask them or the chunk is appended to an
+    inactive cluster no search ever returns."""
+    er = _fresh(ds, slo_s=10.0, store_heavy=False, cache_bytes=0,
+                merge_min_size=3)
+    victims = [cid for cid, c in enumerate(er.clusters) if c.size >= 3][:3]
+    for cid in victims:
+        while er.clusters[cid].active and er.clusters[cid].size > 0:
+            er.remove(int(er.clusters[cid].ids[0]))
+    assert any(not c.active for c in er.clusters)
+    nid = 740_000
+    emb = -np.ones(32, np.float32)       # maximal IP with buried centroids
+    text = f"doc-{nid} adversarial"
+    ds.add_chunk(nid, text, emb)
+    cid = er.insert(nid, text)
+    assert er.clusters[cid].active
+    ids, _, _ = er.search(emb, 5, er.nlist)
+    assert nid in ids[0].tolist()
+    _check_invariants(er)
+
+
+def test_revalidated_split_still_reconciles_storage(ds):
+    """A queued split supersedes the restore at enqueue time; if the
+    cluster shrinks back under the bound before the drain, the revalidated
+    split must fall through to storage reconciliation (Alg. 1) instead of
+    vanishing with the restore it absorbed."""
+    er = _fresh(ds, slo_s=0.2, maintenance="deferred")
+    target = max((cid for cid, c in enumerate(er.clusters)
+                  if c.active and not c.stored),
+                 key=lambda c: er.clusters[c].char_count)
+    cl = er.clusters[target]
+    er.split_max_chars = cl.char_count + 4_000
+    shrink_by = int(cl.ids[0])           # an original ~300-char chunk
+    # one insert crosses BOTH the SLO and the split bound by a whisker:
+    # only OP_SPLIT is enqueued (it supersedes the restore)
+    need = er.split_max_chars - cl.char_count + 100
+    nid = 730_000
+    text, _ = _mk_chunk(ds, nid, er.centroids[target],
+                        np.random.default_rng(14), n_words=need // 4 + 1)
+    assert er.insert(nid, text) == target
+    assert cl.char_count > er.split_max_chars
+    assert cl.gen_latency_est > er.slo_s
+    assert (OP_SPLIT, target) in er.maintenance._queue
+    assert (OP_RESTORE, target) not in er.maintenance._queue
+    er.remove(shrink_by)                 # back under the bound, still >SLO
+    assert cl.char_count <= er.split_max_chars
+    assert cl.gen_latency_est > er.slo_s
+    rep = er.maintenance.drain(None)
+    assert (OP_RESTORE, target) in rep.executed
+    assert cl.stored and target in er.storage
+    _check_invariants(er, quiescent=True)
+
+
+def test_degenerate_split_still_reconciles_storage():
+    """A cluster of duplicate embeddings cannot split (k=2 puts everything
+    in one part); the degenerate split must still perform the storage
+    reconciliation it superseded, or an over-SLO cluster stays un-stored
+    forever."""
+    rng = np.random.default_rng(15)
+    dim = 16
+    dup = rng.standard_normal(dim).astype(np.float32)
+    dup /= np.linalg.norm(dup)
+    n_dup, n = 10, 40
+    embs = rng.standard_normal((n, dim)).astype(np.float32)
+    embs /= np.linalg.norm(embs, axis=1, keepdims=True)
+    embs[:n_dup] = dup                   # one cluster of identical vectors
+    store = {i: f"doc-{i} " + "tok " * 45 for i in range(n)}   # ~190 chars
+    table = {i: embs[i] for i in range(n)}
+    er = EdgeRAGIndex(
+        dim, TableEmbedder(table, dim),
+        lambda ids: [store[int(i)] for i in ids],
+        EdgeCostModel(), slo_s=0.05, store_heavy=True, cache_bytes=0,
+        split_max_chars=2_500)
+    er.build(list(range(n)), [store[i] for i in range(n)], nlist=6,
+             embeddings=embs, seed=0)
+    target = er._chunk_cluster[0]
+    assert all(er._chunk_cluster[i] == target for i in range(n_dup))
+    cl = er.clusters[target]
+    assert not cl.stored                 # under the SLO at build time
+    nid = 100
+    table[nid] = dup
+    store[nid] = f"doc-{nid} " + "tok " * 250        # pushes over both bounds
+    target = er.insert(nid, store[nid])
+    cl = er.clusters[target]                         # split may replace slot
+    assert nid in cl.ids.tolist()
+    assert cl.char_count > er.split_max_chars        # duplicates can't split
+    assert cl.gen_latency_est > er.slo_s
+    assert cl.stored and target in er.storage        # reconciled anyway
+    assert cl.storage_fresh
+
+
+def test_merge_resets_stored_flag(ds):
+    er = _fresh(ds, slo_s=1e-6, merge_min_size=3)    # everything stored
+    victim = next(cid for cid, c in enumerate(er.clusters)
+                  if c.active and 3 <= c.size <= 30)
+    assert er.clusters[victim].stored
+    while er.clusters[victim].active and er.clusters[victim].size > 0:
+        er.remove(int(er.clusters[victim].ids[0]))   # ends in a merge
+    cl = er.clusters[victim]
+    assert not cl.active
+    assert not cl.stored                             # the fixed flag
+    assert victim not in er.storage
+    _check_invariants(er)
+
+
+def test_insert_returns_post_split_cluster(ds):
+    er = _fresh(ds, slo_s=10.0, store_heavy=False, cache_bytes=0,
+                split_max_chars=6_000)
+    rng = np.random.default_rng(10)
+    nid = 680_000
+    moved = False
+    for k in range(60):
+        target = rng.integers(ds.n)
+        text, _ = _mk_chunk(ds, nid, ds.embeddings[target], rng,
+                            n_words=int(rng.integers(20, 200)))
+        pre = int(np.argmax(er.centroids @ ds.embedder.table[nid]))
+        ret = er.insert(nid, text)
+        assert ret == er._chunk_cluster[nid]
+        assert nid in er.clusters[ret].ids.tolist()  # the actual home
+        moved = moved or (ret != pre)
+        nid += 1
+    assert er.nlist > 16                             # splits happened
+    assert moved            # at least one split relocated the fresh chunk
+    _check_invariants(er)
+
+
+# ----------------------------------------------------------------------
+# property-style churn over the Table-4 configs
+# ----------------------------------------------------------------------
+TABLE4 = [
+    dict(store_heavy=False, cache_bytes=0),          # IVF+Embed.Gen.
+    dict(store_heavy=True, cache_bytes=0),           # IVF+Embed.Gen.+Load
+    dict(store_heavy=True, cache_bytes=1 << 20),     # EdgeRAG
+]
+
+
+@pytest.mark.parametrize("cfg", TABLE4,
+                         ids=["gen", "gen+load", "edgerag"])
+def test_churn_invariants_across_table4_configs(ds, cfg):
+    er = _fresh(ds, slo_s=0.05, split_max_chars=10_000, merge_min_size=2,
+                **cfg)
+    rng = np.random.default_rng(11)
+    nid = 700_000
+    for step in range(90):
+        r = rng.random()
+        if r < 0.35:
+            text, _ = _mk_chunk(ds, nid, ds.embeddings[rng.integers(ds.n)],
+                                rng, n_words=int(rng.integers(5, 250)))
+            er.insert(nid, text)
+            nid += 1
+        elif r < 0.70 and er.ntotal > 10:
+            er.remove(int(rng.choice(sorted(er._chunk_cluster))))
+        else:
+            qi = int(rng.integers(len(ds.query_embs)))
+            ids, _, _ = er.search(ds.query_embs[qi], 10, 6)
+            assert all(int(i) in er._chunk_cluster
+                       for i in ids[0] if i >= 0)
+        _check_invariants(er, quiescent=True)        # after EVERY op
+
+
+def test_churn_stream_matches_oracle_rebuild(ds):
+    """Tentpole acceptance: after a churn stream + full drain, the index's
+    chunk-assignment invariants are bit-identical to an oracle index built
+    from scratch on the surviving corpus."""
+    er = _fresh(ds, slo_s=0.1, split_max_chars=12_000, merge_min_size=2,
+                maintenance="deferred")
+    rng = np.random.default_rng(12)
+    nid = 710_000
+    for step in range(80):
+        if rng.random() < 0.5:
+            text, _ = _mk_chunk(ds, nid, ds.embeddings[rng.integers(ds.n)],
+                                rng, n_words=int(rng.integers(5, 150)))
+            er.insert(nid, text)
+            nid += 1
+        else:
+            er.remove(int(rng.choice(sorted(er._chunk_cluster))))
+        if step % 7 == 0:
+            er.maintenance.drain(0.4)                # budgeted mid-stream
+    er.maintenance.drain(None)
+    live = sorted(er._chunk_cluster)
+    oracle = EdgeRAGIndex(32, ds.embedder, ds.get_chunks, EdgeCostModel(),
+                          slo_s=0.1, split_max_chars=12_000,
+                          merge_min_size=2)
+    texts = ds.get_chunks(live)
+    oracle.build(live, texts,
+                 nlist=max(4, sum(1 for c in er.clusters if c.active)),
+                 embeddings=np.stack([ds.embedder.table[i] for i in live]))
+    assert sorted(oracle._chunk_cluster) == live     # identical live set
+    assert oracle.ntotal == er.ntotal
+    assert (sum(c.char_count for c in oracle.clusters if c.active)
+            == sum(c.char_count for c in er.clusters if c.active))
+    assert er._chunk_chars == oracle._chunk_chars
+    _check_invariants(er, quiescent=True)
+    _check_invariants(oracle, quiescent=True)
+
+
+def test_scheduler_revalidates_stale_ops(ds):
+    """Queued ops are re-validated at drain time: a split whose cluster
+    shrank back and a restore whose cluster became cheap are skipped or
+    redirected instead of blindly applied."""
+    er = _fresh(ds, slo_s=0.05, merge_min_size=2, maintenance="deferred")
+    rng = np.random.default_rng(13)
+    nid = 720_000
+    target = max((cid for cid, c in enumerate(er.clusters) if c.active),
+                 key=lambda c: er.clusters[c].char_count)
+    # cap just above the biggest cluster so only OUR inserts cross it
+    er.split_max_chars = er.clusters[target].char_count + 3_000
+    added = []
+    while er.clusters[target].char_count <= er.split_max_chars:
+        text, _ = _mk_chunk(ds, nid, er.centroids[target], rng, n_words=300)
+        if er.insert(nid, text) == target:
+            added.append(nid)
+        nid += 1
+    assert (OP_SPLIT, target) in er.maintenance._queue
+    for i in added:                                  # shrink it back
+        er.remove(i)
+    assert er.clusters[target].char_count <= er.split_max_chars
+    rep = er.maintenance.drain(None)
+    # the stale split is never applied: it is skipped outright or
+    # redirected to the storage reconciliation it superseded at enqueue
+    assert (OP_SPLIT, target) not in rep.executed
+    assert ((OP_SPLIT, target) in rep.skipped
+            or (OP_RESTORE, target) in rep.executed)
+    _check_invariants(er, quiescent=True)
