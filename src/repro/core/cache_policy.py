@@ -34,22 +34,42 @@ class CacheEntry:
 
 
 class CostAwareLFUCache:
-    """Algorithm 2. Capacity in bytes (the paper reports ~7% of system mem)."""
+    """Algorithm 2. Capacity in bytes (the paper reports ~7% of system mem).
+
+    PERF NOTE — lazy decay + running byte total: the paper's "after every
+    access all counters decay by ``decay_factor``" is implemented WITHOUT
+    walking every entry per access.  Entries store counters in a scaled
+    basis: the effective counter is ``entry.counter * _decay_mult``, and a
+    global decay is one multiply of ``_decay_mult`` (a counter bump adds
+    ``1 / _decay_mult`` in the scaled basis).  Eviction order is unchanged —
+    argmin of ``gen_latency * counter`` is invariant under the common
+    positive factor — and ``_decay_mult`` is folded back into the entries
+    whenever it underflows toward the f64 floor, so the basis never loses
+    precision.  ``total_bytes`` is likewise a maintained running total
+    instead of a full scan on every insert.  Hit/miss/eviction semantics
+    are identical to the eager implementation (covered by the existing
+    tests plus the equivalence test in tests/test_slab_scoring.py).
+    """
+
+    _RENORM_BELOW = 1e-150      # fold the global multiplier back into
+    #                             entries long before f64 underflow
 
     def __init__(self, capacity_bytes: int, decay_factor: float = 0.99):
         self.capacity_bytes = capacity_bytes
         self.decay_factor = decay_factor
         self._entries: Dict[int, CacheEntry] = {}
+        self._decay_mult = 1.0          # global lazy-decay multiplier
+        self._total_bytes = 0           # running byte total
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     # ---- Alg. 2 ----
     def access(self, cluster_id: int) -> Optional[np.ndarray]:
-        """Lookup; bumps the counter on hit, decays all counters."""
+        """Lookup; bumps the counter on hit, decays all counters (O(1))."""
         entry = self._entries.get(cluster_id)
         if entry is not None:
-            entry.counter += 1.0
+            entry.counter += 1.0 / self._decay_mult     # effective += 1
             self.hits += 1
             out = entry.embeddings
         else:
@@ -66,12 +86,24 @@ class CostAwareLFUCache:
         nbytes = embeddings.nbytes
         if nbytes > self.capacity_bytes:
             return
-        while self.total_bytes() + nbytes > self.capacity_bytes:
+        # NOTE: when re-inserting a key that is still cached, the eviction
+        # loop runs with the old entry's bytes still counted (and the old
+        # entry itself is a legal victim) — exactly the eager original
+        while self._total_bytes + nbytes > self.capacity_bytes:
             if not self._evict_one():
                 return
-        self._entries[cluster_id] = CacheEntry(
+        old = self._entries.get(cluster_id)
+        if old is not None:             # replaced, not evicted
+            self._total_bytes -= old.nbytes
+        entry = CacheEntry(
             embeddings=np.ascontiguousarray(embeddings, np.float32),
-            gen_latency=float(gen_latency))
+            gen_latency=float(gen_latency),
+            counter=1.0 / self._decay_mult)             # effective 1.0
+        self._entries[cluster_id] = entry
+        # the running total tracks the STORED (f32) entry, like the eager
+        # scan did — the admit/evict decisions above use the caller's
+        # nbytes, also like the eager code
+        self._total_bytes += entry.nbytes
 
     def _evict_one(self) -> bool:
         if not self._entries:
@@ -79,26 +111,33 @@ class CostAwareLFUCache:
         evict_id = min(self._entries,
                        key=lambda i: (self._entries[i].gen_latency
                                       * self._entries[i].counter))
+        self._total_bytes -= self._entries[evict_id].nbytes
         del self._entries[evict_id]
         self.evictions += 1
         return True
 
     def _decay(self):
-        for e in self._entries.values():
-            e.counter *= self.decay_factor
+        self._decay_mult *= self.decay_factor
+        if self._decay_mult < self._RENORM_BELOW:
+            for e in self._entries.values():            # rare: amortized O(1)
+                e.counter *= self._decay_mult
+            self._decay_mult = 1.0
 
     # ---- maintenance used by Alg. 3's "evicts and prevents caching" ----
     def drop_below_threshold(self, threshold: float):
         for cid in [c for c, e in self._entries.items()
                     if e.gen_latency < threshold]:
+            self._total_bytes -= self._entries[cid].nbytes
             del self._entries[cid]
             self.evictions += 1
 
     def invalidate(self, cluster_id: int):
-        self._entries.pop(cluster_id, None)
+        entry = self._entries.pop(cluster_id, None)
+        if entry is not None:
+            self._total_bytes -= entry.nbytes
 
     def total_bytes(self) -> int:
-        return sum(e.nbytes for e in self._entries.values())
+        return self._total_bytes
 
     def __contains__(self, cluster_id: int) -> bool:
         return cluster_id in self._entries

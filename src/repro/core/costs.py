@@ -46,6 +46,11 @@ class EdgeCostModel:
     search_flops_per_sec: float = 2.0e11
     # int8/fp16 storage codecs dequantize on load (widen + scale per value)
     dequant_values_per_sec: float = 2.0e9
+    # fused in-kernel dequant (packed-slab scoring): the widen rides the
+    # score matmul's data stream and the int8 per-row scale is applied to
+    # the (Q, N) score block, not the (N, D) slab — far cheaper per value
+    # than a standalone decode pass that materializes an fp32 copy
+    fused_dequant_values_per_sec: float = 8.0e9
     # LLM prefill (Sheared-LLaMA-2.7B on Orin): tokens/s
     prefill_tokens_per_sec: float = 400.0
 
@@ -78,6 +83,17 @@ class EdgeCostModel:
         """Decode cost of a quantized storage codec (zero work for fp32)."""
         return n_values / self.dequant_values_per_sec
 
+    def fused_dequant_latency(self, n_values: int) -> float:
+        """In-kernel decode of a quantized slab segment, charged once per
+        slab (per unique cluster) — never per probing query."""
+        return n_values / self.fused_dequant_values_per_sec
+
+    def slab_pack_latency(self, n_bytes: int) -> float:
+        """Copying one resolved cluster's compact payload into the batch
+        slab: a DRAM read + write.  Replaces the old per-query concat,
+        which re-copied every shared cluster once per probing query."""
+        return 2.0 * n_bytes / self.dram_bw_bytes_per_sec
+
     def prefill_latency(self, n_tokens: int) -> float:
         return n_tokens / self.prefill_tokens_per_sec
 
@@ -93,6 +109,9 @@ class LatencyBreakdown:
     l2_cache_hit_s: float = 0.0
     l2_mem_load_s: float = 0.0
     l2_search_s: float = 0.0
+    # packed-slab scoring engine (owner-charged, once per unique cluster):
+    l2_slab_pack_s: float = 0.0         # compact payload copy into the slab
+    l2_fused_dequant_s: float = 0.0     # in-kernel fp16/int8 decode
     wall_s: float = 0.0
     n_clusters_probed: int = 0
     n_generated: int = 0
@@ -106,7 +125,8 @@ class LatencyBreakdown:
         return (self.embed_query_s + self.centroid_search_s
                 + self.l2_generate_s + self.l2_storage_load_s
                 + self.l2_dequant_s + self.l2_cache_hit_s
-                + self.l2_mem_load_s + self.l2_search_s)
+                + self.l2_mem_load_s + self.l2_search_s
+                + self.l2_slab_pack_s + self.l2_fused_dequant_s)
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self) | {"retrieval_s": self.retrieval_s}

@@ -59,9 +59,24 @@ coalesced regeneration groups — and the shared
 ``storage_codec=``), cache lookups, one ``embed_fn`` call per regen group.
 A precomputed plan can be handed back to ``search_batch(plan=...)`` so the
 serving engine can prefetch the plan's storage loads before prompt
-assembly.  ``search_batch(..., mesh=...)`` routes the second-level scoring
-of each query's resolved slab through ``sharded_topk_ip`` (pod-sharded
-mode, core/sharded_retrieval.py); ids match the unsharded path.
+assembly.
+
+PACKED-SLAB SCORING (kernels/slab_topk + resolver.SlabLayout): the
+second-level scoring step packs the batch's unique resolved clusters
+exactly ONCE into contiguous slabs (one per storage representation, with
+per-cluster (offset, length) extents and a parallel chunk-id slab) and
+scores ALL queries in one ragged multi-query kernel launch per slab —
+per-(query, row) membership and the per-query virtual concat order ride
+in an int32 ``virt`` matrix whose entries double as the top-k tie-break
+key, so fp32 results are bit-identical to the old per-query
+concat + top-k loop while shared clusters are copied once instead of once
+per probing query.  fp16/int8 storage payloads are loaded UNDECODED
+(``StorageBackend.get_many_raw``) and dequantized inside the kernel's
+dot-product block (per-row scales on the score tile) — no fp32 copy of
+quantized storage is ever materialized.  ``search_batch(..., mesh=...)``
+shards the slab itself: ONE ``sharded_slab_topk`` launch per batch per
+representation (core/sharded_retrieval.py) instead of one collective per
+query; ids match the unsharded path.
 
 PLAN-STALENESS CONTRACT (core/maintenance.py): every cluster carries a
 monotonically increasing ``generation``, bumped by any mutation — insert,
@@ -98,6 +113,7 @@ from repro.core.maintenance import (OP_DROP_STORE, OP_MERGE, OP_RESTORE,
 from repro.core.resolver import ClusterResolver, ResolutionPlan
 from repro.core.storage import StorageBackend
 from repro.kernels.ivf_topk.ops import topk_ip
+from repro.kernels.slab_topk.ops import NOT_PROBED, slab_topk
 
 
 @dataclasses.dataclass
@@ -274,8 +290,9 @@ class EdgeRAGIndex:
 
         ``plan``: a precomputed :class:`ResolutionPlan` from
         :meth:`plan_batch` (same queries / nprobe) — skips re-probing and
-        re-planning.  ``mesh``: route each query's second-level scoring
-        through ``sharded_topk_ip`` over the mesh's ``shard_axis``.
+        re-planning.  ``mesh``: row-shard the batch slab over the mesh's
+        ``shard_axis`` and score through ``sharded_slab_topk`` — one
+        collective per batch per representation.
         """
         queries = np.atleast_2d(np.asarray(query_embs, np.float32))
         nq = queries.shape[0]
@@ -300,46 +317,76 @@ class EdgeRAGIndex:
             for qi in range(nq):
                 lats[qi].n_clusters_probed = len(probed_per_q[qi])
                 lats[qi].centroid_search_s = centroid_s
-            # Steps 2-5: execute the plan — batched storage get_many under
-            # the configured codec, cache payloads, coalesced regeneration.
-            # Owners are charged the single-query formulas.
+            # Steps 2-5: execute the plan in RAW mode and PACK — batched
+            # raw-codec storage get_many_raw, cache payloads, coalesced
+            # regeneration, every unique cluster packed exactly once into
+            # the batch slab.  Owners are charged the single-query tier
+            # formulas plus the slab-pack copy (and fused dequant for
+            # quantized payloads) once per slab.
             owner = plan.owner
             missed = [False] * nq
-            resolved = self.resolver.execute(plan, lats, missed)
+            slab = self.resolver.execute_slab(plan, lats, missed)
             # Non-owners re-read the already-resident embeddings from DRAM
             # (resident set is invariant here: nothing mutates the cache
-            # between execute() and scoring, so hoist the byte count)
+            # between execute_slab() and scoring, so hoist the byte count)
             resident = self.memory_bytes()
             for qi, probed in enumerate(probed_per_q):
                 for cid in probed:
                     if owner[cid] != qi:
                         lats[qi].l2_mem_load_s += self.cost.mem_load_latency(
-                            resolved[cid].nbytes, resident_bytes=resident)
+                            slab.nbytes(cid), resident_bytes=resident)
                         lats[qi].n_shared_hits += 1
-            # Step 6: per-query fused top-k in the query's own probed order
-            for qi, probed in enumerate(probed_per_q):
-                if not probed:
+            # Step 6: packed-slab scoring — ONE ragged multi-query launch
+            # per storage representation (at most three: fp32/fp16/int8)
+            # scores the whole batch; per (query, cluster) membership rides
+            # in the virt matrices, whose virtual per-query concat indices
+            # double as the tie-break key, so results are identical to the
+            # old per-query concat + top-k loop (bitwise on the fp32 tier).
+            # fp16/int8 segments dequantize INSIDE the kernel; no fp32 copy
+            # of quantized storage is materialized.
+            virts, n_valid, n_valid_seg = slab.query_layout(probed_per_q)
+            lane = np.arange(k)[None, :]
+            cand_vals, cand_virt, cand_ids = [], [], []
+            for seg in slab.segments:
+                if seg.rows == 0:
                     continue
-                embs = np.concatenate([resolved[c] for c in probed])
-                idmap = np.concatenate(
-                    [self.clusters[c].ids for c in probed])
-                if len(embs) == 0:
-                    # every probed cluster vanished (merged away) between
-                    # plan and execute — a stale plan degrades to no hits
-                    continue
-                if mesh is not None and len(embs) >= k:
-                    from repro.core.sharded_retrieval import sharded_topk_ip
-                    vals, idx = sharded_topk_ip(embs, queries[qi:qi + 1], k,
-                                                mesh, shard_axis)
+                virt = virts[seg.kind]
+                if mesh is not None and seg.rows >= k:
+                    from repro.core.sharded_retrieval import sharded_slab_topk
+                    vals, rows = sharded_slab_topk(
+                        seg.emb, queries, virt, k, mesh, shard_axis,
+                        scales=seg.scales)
                 else:
-                    vals, idx = topk_ip(embs, queries[qi:qi + 1], k)
-                vals, idx = np.asarray(vals), np.asarray(idx)
-                lats[qi].l2_search_s = self.cost.search_latency(
-                    len(embs), self.dim)
-                out_vals[qi] = vals[0]
-                out_ids[qi] = np.where(
-                    idx[0] >= 0, idmap[np.clip(idx[0], 0, len(idmap) - 1)],
-                    -1)
+                    vals, rows = slab_topk(seg.emb, queries, virt, k,
+                                           scales=seg.scales)
+                vals, rows = np.asarray(vals), np.asarray(rows)
+                # mask the padding lanes BEFORE the id gather and insist
+                # every remaining row is in-range — the old path's np.clip
+                # silently mapped any out-of-range index to the last id
+                valid = lane < n_valid_seg[seg.kind][:, None]    # (Q, k)
+                assert ((rows[valid] >= 0)
+                        & (rows[valid] < seg.rows)).all(), \
+                    "slab top-k returned out-of-range rows"
+                rows = np.where(valid, rows, 0)
+                cand_ids.append(np.where(valid, seg.ids[rows], -1))
+                cand_vals.append(np.where(valid, vals, -np.inf))
+                cand_virt.append(np.where(
+                    valid, virt[np.arange(nq)[:, None], rows],
+                    np.int32(NOT_PROBED)))
+            if len(cand_vals) == 1:        # one representation (fp32 path)
+                out_vals[:, :] = cand_vals[0]
+                out_ids[:, :] = cand_ids[0]
+            elif cand_vals:                # merge segments per query under
+                cv = np.concatenate(cand_vals, axis=1)   # the same total
+                ct = np.concatenate(cand_virt, axis=1)   # order the kernel
+                ci = np.concatenate(cand_ids, axis=1)    # selected by
+                order = np.lexsort((ct, -cv), axis=1)[:, :k]
+                out_vals[:, :] = np.take_along_axis(cv, order, axis=1)
+                out_ids[:, :] = np.take_along_axis(ci, order, axis=1)
+            for qi in range(nq):
+                if n_valid[qi]:
+                    lats[qi].l2_search_s = self.cost.search_latency(
+                        int(n_valid[qi]), self.dim)
         for lat in lats:                       # amortized batch wall time
             lat.wall_s = t.elapsed / nq
         # ---- Algorithm 3: adapt the threshold, once per query in order

@@ -41,15 +41,30 @@ The fp32 tier is bit-identical to the pre-refactor inlined logic: the same
 state mutations happen in the same order (cache access per unique cluster at
 plan time, inserts after regeneration, per-field latency accumulation in
 owner order), asserted by the Table-4 parity tests.
+
+PACKED-SLAB SCORING (kernels/slab_topk): :meth:`ClusterResolver.execute_slab`
+runs ``execute`` in RAW mode — storage-tier clusters load their codec
+payloads *undecoded* (``StorageBackend.get_many_raw``) — and packs every
+resolved cluster exactly once into a :class:`SlabLayout`: one contiguous
+(N_total, d) embedding slab per storage representation present in the batch
+(fp32 / fp16 / int8+scales), a parallel chunk-id slab, and per-cluster
+(offset, length) extents.  The per-cluster payloads become views into the
+slab.  Scoring then runs ONE ragged multi-query kernel launch per segment
+instead of Q concat-and-top-k rounds, with fp16/int8 segments dequantized
+inside the kernel's dot-product block (per-row scales) — no fp32 copy of
+quantized storage is ever materialized.  Owners are charged the slab-pack
+copy (``l2_slab_pack_s``) and the fused decode (``l2_fused_dequant_s``)
+once per slab, not once per probing query.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.costs import LatencyBreakdown
+from repro.kernels.slab_topk.ops import NOT_PROBED
 
 TIER_STORAGE = "storage"
 TIER_CACHE = "cache"
@@ -76,7 +91,9 @@ class ResolutionPlan:
     generations: Dict[int, int] = dataclasses.field(default_factory=dict)
     # ^ plan-time generation stamp per planned cluster; execute() treats any
     #   mismatch with the live cluster as a stale plan entry
-    prefetched: Optional[Dict[int, np.ndarray]] = None  # early storage loads
+    prefetched: Optional[Dict[int, Dict[str, np.ndarray]]] = None
+    # ^ early storage loads — RAW codec payloads (never decoded here; the
+    #   slab scorer consumes them via fused dequant)
 
     def fresh(self, cid: int, cluster) -> bool:
         """True iff ``cluster`` has not mutated since this plan was made
@@ -91,6 +108,168 @@ class ResolutionPlan:
     @property
     def n_unique(self) -> int:
         return len(self.owner)
+
+
+@dataclasses.dataclass
+class SlabPayload:
+    """One resolved cluster in its scoring representation.
+
+    ``kind`` is the slab segment it packs into: "fp32" (cache / regen /
+    fp32 storage), "fp16", or "int8" (undecoded storage payloads).
+    ``scales`` is the int8 codec's per-row scale column, (n, 1) f32.
+    """
+    kind: str
+    emb: np.ndarray
+    scales: Optional[np.ndarray] = None
+
+    @property
+    def rows(self) -> int:
+        return len(self.emb)
+
+    @property
+    def nbytes(self) -> int:
+        return self.emb.nbytes + (0 if self.scales is None
+                                  else self.scales.nbytes)
+
+    @classmethod
+    def from_raw(cls, payload: Dict[str, np.ndarray]) -> "SlabPayload":
+        """Wrap an undecoded ``StorageBackend`` codec payload."""
+        if "q" in payload:
+            return cls("int8", payload["q"],
+                       np.ascontiguousarray(payload["scale"], np.float32))
+        emb = payload["emb"]
+        if emb.dtype == np.float16:
+            return cls("fp16", emb)
+        return cls("fp32", np.ascontiguousarray(emb, np.float32))
+
+
+@dataclasses.dataclass
+class SlabSegment:
+    """One contiguous packed slab: every cluster of one representation."""
+    kind: str                       # "fp32" | "fp16" | "int8"
+    emb: np.ndarray                 # (rows, d) packed, segment dtype
+    scales: Optional[np.ndarray]    # (rows, 1) f32 — int8 segments only
+    ids: np.ndarray                 # (rows,) int64 parallel chunk-id slab
+    clusters: List[int]             # cluster ids in pack order
+
+    @property
+    def rows(self) -> int:
+        return len(self.emb)
+
+
+@dataclasses.dataclass
+class SlabLayout:
+    """The batch's unique resolved clusters, each packed exactly ONCE.
+
+    ``extent`` maps cluster id -> (kind, row offset, row length) into the
+    segment of that representation; clusters that resolved to zero rows
+    (merged away between plan and execute) get a zero-length extent and
+    never reach scoring.  At most three segments exist (fp32 / fp16 /
+    int8); a pure-fp32 batch packs one.
+    """
+    dim: int
+    segments: List[SlabSegment]
+    extent: Dict[int, Tuple[str, int, int]]
+
+    @property
+    def total_rows(self) -> int:
+        return sum(seg.rows for seg in self.segments)
+
+    def segment(self, kind: str) -> SlabSegment:
+        return next(seg for seg in self.segments if seg.kind == kind)
+
+    def view(self, cid: int) -> np.ndarray:
+        """The cluster's packed rows — a VIEW into its segment's slab."""
+        kind, off, length = self.extent[cid]
+        if length == 0:
+            return np.zeros((0, self.dim), np.float32)
+        return self.segment(kind).emb[off:off + length]
+
+    def nbytes(self, cid: int) -> int:
+        """Resident (packed) bytes of one cluster — what a peer query's
+        shared-hit DRAM re-read streams."""
+        kind, off, length = self.extent[cid]
+        if length == 0:
+            return 0
+        seg = self.segment(kind)
+        n = length * seg.emb.shape[1] * seg.emb.itemsize
+        if seg.scales is not None:
+            n += length * seg.scales.itemsize
+        return n
+
+    @classmethod
+    def pack(cls, dim: int, order: Sequence[int],
+             payloads: Dict[int, SlabPayload],
+             ids_of) -> "SlabLayout":
+        """Pack ``payloads`` (in ``order``) into per-kind segments.
+
+        ``ids_of(cid)`` supplies the cluster's current chunk ids; the
+        staleness guards upstream guarantee they align with the payload
+        rows (asserted here as defense in depth).
+        """
+        by_kind: Dict[str, List[int]] = {}
+        extent: Dict[int, Tuple[str, int, int]] = {}
+        for cid in order:
+            p = payloads[cid]
+            if p.rows == 0:
+                extent[cid] = (p.kind, 0, 0)
+                continue
+            by_kind.setdefault(p.kind, []).append(cid)
+        segments: List[SlabSegment] = []
+        for kind, cids in by_kind.items():
+            rows = sum(payloads[c].rows for c in cids)
+            d = payloads[cids[0]].emb.shape[1]
+            emb = np.empty((rows, d), payloads[cids[0]].emb.dtype)
+            scales = (np.empty((rows, 1), np.float32) if kind == "int8"
+                      else None)
+            ids = np.empty((rows,), np.int64)
+            off = 0
+            for cid in cids:
+                p = payloads[cid]
+                cl_ids = ids_of(cid)
+                assert len(cl_ids) == p.rows, \
+                    f"cluster {cid}: {len(cl_ids)} ids vs {p.rows} rows"
+                emb[off:off + p.rows] = p.emb
+                ids[off:off + p.rows] = cl_ids
+                if scales is not None:
+                    scales[off:off + p.rows] = p.scales
+                extent[cid] = (kind, off, p.rows)
+                off += p.rows
+            segments.append(SlabSegment(kind=kind, emb=emb, scales=scales,
+                                        ids=ids, clusters=list(cids)))
+        return cls(dim=dim, segments=segments, extent=extent)
+
+    def query_layout(self, probed_per_q: Sequence[Sequence[int]]):
+        """Per-(query, cluster) membership from the plan's probe lists.
+
+        Returns ``(virts, n_valid, n_valid_seg)``: ``virts`` maps each
+        segment kind to a (Q, rows) int32 matrix whose entry is the row's
+        position in that query's VIRTUAL per-query concatenation (probed
+        clusters in probe order) or ``NOT_PROBED``; ``n_valid`` (Q,) is
+        each query's total member-row count across segments (its virtual
+        concat length), and ``n_valid_seg`` maps kind -> (Q,) per-segment
+        member counts (the valid-lane bound for that segment's top-k
+        output).  virt is both the scoring mask and the tie-break key that
+        keeps slab results identical to the per-query concat loop.
+        """
+        nq = len(probed_per_q)
+        virts = {seg.kind: np.full((nq, seg.rows), NOT_PROBED, np.int32)
+                 for seg in self.segments}
+        n_valid = np.zeros((nq,), np.int64)
+        n_valid_seg = {seg.kind: np.zeros((nq,), np.int64)
+                       for seg in self.segments}
+        for qi, probed in enumerate(probed_per_q):
+            base = 0
+            for cid in probed:
+                kind, off, length = self.extent[cid]
+                if length == 0:
+                    continue
+                virts[kind][qi, off:off + length] = np.arange(
+                    base, base + length, dtype=np.int32)
+                base += length
+                n_valid_seg[kind][qi] += length
+            n_valid[qi] = base
+        return virts, n_valid, n_valid_seg
 
 
 class ClusterResolver:
@@ -170,22 +349,27 @@ class ClusterResolver:
     # prefetch (serving engine hook)
     # ------------------------------------------------------------------
     def prefetch(self, plan: ResolutionPlan) -> ResolutionPlan:
-        """Issue the plan's storage loads ahead of execution.  The payloads
-        ride along on the plan so execute() doesn't re-read them; the engine
-        overlaps their modeled I/O seconds with prefill."""
+        """Issue the plan's storage loads ahead of execution.  The RAW
+        codec payloads ride along on the plan so execute() doesn't re-read
+        them (decode stays fused into scoring); the engine overlaps their
+        modeled I/O seconds with prefill."""
         if plan.storage_clusters and plan.prefetched is None:
-            loaded = self.index.storage.get_many(plan.storage_clusters)
-            plan.prefetched = {cid: emb for cid, emb
+            loaded = self.index.storage.get_many_raw(plan.storage_clusters)
+            plan.prefetched = {cid: payload for cid, payload
                                in zip(plan.storage_clusters, loaded)
-                               if emb is not None}
+                               if payload is not None}
         return plan
 
     # ------------------------------------------------------------------
     # execute
     # ------------------------------------------------------------------
     def execute(self, plan: ResolutionPlan, lats: List[LatencyBreakdown],
-                missed: List[bool]) -> Dict[int, np.ndarray]:
-        """Materialize ``plan``; returns cluster id -> f32 (n, d) matrix.
+                missed: List[bool], *, raw: bool = False) -> Dict[int, object]:
+        """Materialize ``plan``; returns cluster id -> f32 (n, d) matrix,
+        or cluster id -> :class:`SlabPayload` when ``raw=True`` (the slab
+        scoring mode: storage-tier clusters stay in their codec
+        representation — no decode, no fp32 copy; decode fuses into the
+        scoring kernel and is charged at pack time).
 
         Side effects mirror the single-query path: owners are charged tier
         costs, regenerated clusters refresh ``gen_latency_est`` and enter
@@ -193,7 +377,7 @@ class ClusterResolver:
         set for every query that owns a regenerated cluster.
         """
         ix = self.index
-        resolved: Dict[int, np.ndarray] = {}
+        resolved: Dict[int, object] = {}
         regen_groups = [list(g) for g in plan.regen_groups]
         fallback: List[int] = []      # stale / vanished since plan time
         if plan.storage_clusters:
@@ -201,8 +385,8 @@ class ClusterResolver:
                 loaded = [plan.prefetched.get(c)
                           for c in plan.storage_clusters]
             else:
-                loaded = ix.storage.get_many(plan.storage_clusters)
-            for cid, embs in zip(plan.storage_clusters, loaded):
+                loaded = ix.storage.get_many_raw(plan.storage_clusters)
+            for cid, payload in zip(plan.storage_clusters, loaded):
                 # Staleness guard: a prefetched payload is only scoreable if
                 # the cluster's generation never moved after the plan; an
                 # execute-time load only if the storage copy reflects the
@@ -214,7 +398,8 @@ class ClusterResolver:
                 cl = ix.clusters[cid]
                 fresh = (plan.fresh(cid, cl) if plan.prefetched is not None
                          else cl.storage_fresh)
-                if embs is None or not fresh or len(embs) != cl.size:
+                if (payload is None or not fresh
+                        or ix.storage.payload_rows(payload) != cl.size):
                     fallback.append(cid)
                     continue
                 try:
@@ -224,11 +409,15 @@ class ClusterResolver:
                     continue
                 lat = lats[plan.owner[cid]]
                 lat.l2_storage_load_s += ix.cost.storage_load_latency(nbytes)
+                lat.n_storage_loads += 1
+                if raw:
+                    resolved[cid] = SlabPayload.from_raw(payload)
+                    continue
+                embs = ix.storage.decode(payload)
                 if ix.storage.codec != "fp32":
                     # decode is compute, not I/O: charged separately so the
                     # engine's prefetch overlap only hides true I/O seconds
                     lat.l2_dequant_s += ix.cost.dequant_latency(embs.size)
-                lat.n_storage_loads += 1
                 resolved[cid] = embs
         for cid, embs in plan.cached.items():
             # generation guard (same-size mutations included) + row-count
@@ -243,7 +432,7 @@ class ClusterResolver:
             lat.l2_cache_hit_s += ix.cost.mem_load_latency(
                 embs.nbytes, resident_bytes=ix.memory_bytes())
             lat.n_cache_hits += 1
-            resolved[cid] = embs
+            resolved[cid] = SlabPayload("fp32", embs) if raw else embs
         if fallback:
             regen_groups.append(fallback)
         heal = set(fallback) | set(plan.restore)
@@ -254,7 +443,8 @@ class ClusterResolver:
             dead = [c for c in group if not (ix.clusters[c].active
                                              and ix.clusters[c].size > 0)]
             for c in dead:
-                resolved[c] = np.zeros((0, ix.dim), np.float32)
+                empty = np.zeros((0, ix.dim), np.float32)
+                resolved[c] = SlabPayload("fp32", empty) if raw else empty
             group = [c for c in group if c not in dead]
             if not group:
                 continue
@@ -282,8 +472,38 @@ class ClusterResolver:
                     ix.cache.insert(
                         cid, sub.copy(), gen_s,
                         min_latency_threshold=ix.threshold.threshold)
-                resolved[cid] = sub
+                resolved[cid] = SlabPayload("fp32", sub) if raw else sub
         return resolved
+
+    # ------------------------------------------------------------------
+    # packed-slab execution (the search_batch scoring engine)
+    # ------------------------------------------------------------------
+    def execute_slab(self, plan: ResolutionPlan,
+                     lats: List[LatencyBreakdown],
+                     missed: List[bool]) -> SlabLayout:
+        """RAW-mode :meth:`execute` + pack: every resolved cluster lands
+        exactly once in a :class:`SlabLayout` segment of its storage
+        representation; the per-cluster payloads become views into the
+        slab (:meth:`SlabLayout.view`).  Each cluster's owner is charged
+        the pack copy (``l2_slab_pack_s``) and, for fp16/int8 payloads,
+        the fused in-kernel decode (``l2_fused_dequant_s``) — once per
+        slab, not once per probing query (the old path dequantized and
+        re-concatenated shared clusters Q times over).
+        """
+        ix = self.index
+        payloads = self.execute(plan, lats, missed, raw=True)
+        slab = SlabLayout.pack(ix.dim, list(plan.owner), payloads,
+                               lambda cid: ix.clusters[cid].ids)
+        for cid, owner_qi in plan.owner.items():
+            p = payloads[cid]
+            if p.rows == 0:
+                continue
+            lat = lats[owner_qi]
+            lat.l2_slab_pack_s += ix.cost.slab_pack_latency(p.nbytes)
+            if p.kind != "fp32":
+                lat.l2_fused_dequant_s += ix.cost.fused_dequant_latency(
+                    p.emb.size)
+        return slab
 
     # ------------------------------------------------------------------
     # regeneration (shared with the maintenance paths)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.kernels.slab_topk.ops import ROW_PAD
+from repro.kernels.slab_topk.ref import NOT_PROBED
 from repro.models.distributed import shard_map   # jax 0.4/0.5 compat shim
 
 NEG_INF = -1e30
@@ -66,6 +68,77 @@ def sharded_topk_ip(embs, queries, k: int, mesh, axis: str = "data"
         check_vma=False)
     with mesh:
         return fn(embs, queries)
+
+
+def sharded_slab_topk(emb, queries, virt, k: int, mesh, axis: str = "data",
+                      scales=None) -> Tuple[jax.Array, jax.Array]:
+    """Pod-sharded ragged multi-query top-k over ONE packed slab per batch.
+
+    The pre-slab sharded route issued one ``sharded_topk_ip`` per query
+    over that query's re-concatenated clusters — Q all-gathers and Q
+    copies of every shared cluster.  Here the batch's packed slab ``emb``
+    (N, D; fp32/fp16/int8) row-shards over ``axis`` together with its
+    membership matrix ``virt`` (Q, N, sharded on N) and optional per-row
+    ``scales`` (N, 1); every shard scores its local rows for ALL queries
+    with fused dequant, selects its local best-k by (score desc, virt
+    asc), and one all-gather of k·shards candidates per query merges
+    globally under the same total order.  Results are identical to
+    ``kernels.slab_topk.slab_topk`` on the unsharded slab.
+    """
+    n, d = emb.shape
+    nq = queries.shape[0]
+    if n == 0 or k == 0:
+        return (jnp.full((nq, k), -np.inf, jnp.float32),
+                jnp.full((nq, k), ROW_PAD, jnp.int32))
+    k_eff = min(k, n)      # same clamp-and-pad contract as ops.slab_topk
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    pad = (-n) % n_shards
+    if pad:
+        emb = jnp.pad(emb, ((0, pad), (0, 0)))
+        virt = jnp.pad(virt, ((0, 0), (0, pad)),
+                       constant_values=NOT_PROBED)
+        if scales is not None:
+            scales = jnp.pad(scales, ((0, pad), (0, 0)))
+    kk = min(k_eff, emb.shape[0] // n_shards)
+
+    def local_fn(emb_loc, q, virt_loc, *maybe_scales):
+        from repro.kernels.slab_topk.ref import lex_topk
+        shard = jax.lax.axis_index(axis)
+        s_rows = emb_loc.shape[0]
+        scores = q.astype(jnp.float32) @ emb_loc.astype(jnp.float32).T
+        if maybe_scales:
+            scores = scores * maybe_scales[0].astype(jnp.float32)[:, 0][None]
+        masked = jnp.where(virt_loc < NOT_PROBED, scores, NEG_INF)
+        # local best-kk by (score desc, virt asc)
+        lvals, lidx = lex_topk(masked, virt_loc, kk)
+        lvirt = jnp.take_along_axis(virt_loc, lidx, axis=1)
+        lrows = shard * s_rows + lidx
+        # gather the per-shard candidates everywhere, merge locally under
+        # the SAME total order
+        av = jax.lax.all_gather(lvals, axis, axis=1)        # (Q, S, kk)
+        at = jax.lax.all_gather(lvirt, axis, axis=1)
+        ar = jax.lax.all_gather(lrows, axis, axis=1)
+        qn = av.shape[0]
+        fv, ft, fr = (a.reshape(qn, -1) for a in (av, at, ar))
+        mv, midx = lex_topk(fv, ft, k_eff)
+        return mv, jnp.take_along_axis(fr, midx, axis=1).astype(jnp.int32)
+
+    in_specs = [P(axis, None), P(None, None), P(None, axis)]
+    operands = [emb, queries, virt]
+    if scales is not None:
+        in_specs.append(P(axis, None))
+        operands.append(scales)
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=tuple(in_specs), out_specs=(P(), P()),
+                   check_vma=False)
+    with mesh:
+        vals, rows = fn(*operands)
+    if k_eff < k:
+        vals = jnp.pad(vals, ((0, 0), (0, k - k_eff)),
+                       constant_values=-np.inf)
+        rows = jnp.pad(rows, ((0, 0), (0, k - k_eff)),
+                       constant_values=ROW_PAD)
+    return vals, rows
 
 
 class ShardedFlatSearch:

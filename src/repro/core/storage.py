@@ -17,6 +17,17 @@ stored payload can be narrowed below fp32 —
 ``get``/``get_many`` always return contiguous f32 matrices (decode on
 load); ``stored_bytes``/``total_bytes`` report the *encoded* payload size,
 which is what the cost model charges for a storage load.
+
+RAW-CODEC LOADS (``get_many_raw``): the packed-slab scoring engine scores
+fp16/int8 clusters directly in their storage representation (fused
+in-kernel dequantization, kernels/slab_topk), so it loads payloads
+*undecoded*: ``get_many_raw`` returns each cluster's codec payload dict
+exactly as stored — ``{"emb": f32|f16}`` or ``{"q": int8, "scale": f16}``
+— with a missing key yielding ``None``, same ordering contract as
+``get_many``.  Callers must treat the payload arrays as READ-ONLY (memory
+mode hands out the live stored arrays, not copies); ``payload_rows`` gives
+the row count without decoding and ``decode`` turns a raw payload into the
+f32 matrix ``get`` would have returned.
 """
 from __future__ import annotations
 
@@ -66,6 +77,15 @@ class StorageBackend:
             return dequantize_rows(payload["q"], payload["scale"])
         return np.ascontiguousarray(payload["emb"], np.float32)
 
+    def decode(self, payload: Dict[str, np.ndarray]) -> np.ndarray:
+        """Decode a raw payload (from ``get_many_raw``) to f32 (n, d)."""
+        return self._decode(payload)
+
+    @staticmethod
+    def payload_rows(payload: Dict[str, np.ndarray]) -> int:
+        """Row count of a raw payload without decoding it."""
+        return len(payload["q"] if "q" in payload else payload["emb"])
+
     # ---- filesystem (disk mode only) ------------------------------------
     def _path(self, key: int) -> str:
         if self.root is None:
@@ -107,6 +127,13 @@ class StorageBackend:
             payload = self._load(key)
             out.append(None if payload is None else self._decode(payload))
         return out
+
+    def get_many_raw(self, keys: Sequence[int]
+                     ) -> List[Optional[Dict[str, np.ndarray]]]:
+        """Batched load of UNDECODED codec payloads, results in ``keys``
+        order, missing key -> ``None`` (see module docstring: payloads are
+        read-only; the slab scorer consumes them via fused dequant)."""
+        return [self._load(key) for key in keys]
 
     def delete(self, key: int):
         self._nbytes.pop(key, None)

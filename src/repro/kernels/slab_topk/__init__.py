@@ -1,0 +1,4 @@
+from repro.kernels.slab_topk.ops import NOT_PROBED, ROW_PAD, slab_topk
+from repro.kernels.slab_topk.ref import slab_topk_ref
+
+__all__ = ["slab_topk", "slab_topk_ref", "NOT_PROBED", "ROW_PAD"]

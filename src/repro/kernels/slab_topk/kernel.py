@@ -1,0 +1,179 @@
+"""Pallas TPU kernel: ragged multi-query top-k over a packed cluster slab.
+
+The batch's unique probed clusters live packed exactly once in one
+contiguous (N, D) slab; each query's probe set is a *subset* of the slab's
+rows.  The grid is (Q // BLOCK_Q, N // BLOCK_N) with N minor (sequential),
+like ``ivf_topk`` — but the masking input ``virt`` (Q, N) int32 makes the
+scan ragged: a row only competes for query q when ``virt[q, r] <
+NOT_PROBED``, and ``virt`` doubles as the tie-break key (the row's position
+in q's virtual per-query concatenation), so the selected rows are exactly
+``jax.lax.top_k`` over the virtual concat the pre-slab per-query loop
+materialized Q times.
+
+Fused dequantization: the slab block is loaded HBM->VMEM in its compact
+storage dtype.  fp16 widens in registers before the MXU dot (lossless);
+int8 dots in f32 and applies the per-row scale to the (BLOCK_Q, BLOCK_N)
+score block — one multiply per score instead of per element, and no
+(N, D) fp32 copy ever materializes.
+
+Top-k maintenance is k iterations of a row-vectorized lexicographic
+(max-score, min-virt) select over the (BLOCK_Q, k + BLOCK_N) candidate
+matrix, same shape of work as ``ivf_topk`` with one extra reduction for
+the tie-break lane.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.slab_topk.ref import NEG_INF, NOT_PROBED
+
+EXHAUSTED = NOT_PROBED + 1      # virt key after a candidate is consumed
+ROW_SENTINEL = 2**30
+
+
+def _slab_merge_rows(scores, virt, base_idx, run_v, run_t, run_r, k: int):
+    """Merge a block's (BQ, BN) scores into the running (BQ, k) best by
+    (score desc, virt asc).
+
+    Each of the k iterations does a row-wise max over scores, then a
+    row-wise argmin over the virt key restricted to score-maximal columns —
+    virt is unique per (query, valid row), so the selection is a total
+    order and the block-streaming merge equals a global sort.
+    """
+    cand_v = jnp.concatenate([run_v, scores], axis=1)        # (BQ, k + BN)
+    cand_t = jnp.concatenate([run_t, virt], axis=1)
+    cand_r = jnp.concatenate(
+        [run_r, jnp.broadcast_to(base_idx[None], scores.shape)], axis=1)
+    col = jax.lax.broadcasted_iota(jnp.int32, cand_v.shape, 1)
+
+    def body(i, carry):
+        v, t, out_v, out_t, out_r = carry
+        m = jnp.max(v, axis=1, keepdims=True)                # (BQ, 1)
+        tie = jnp.where(v == m, t, EXHAUSTED)                # min virt among
+        j = jnp.argmin(tie, axis=1)                          # score-maximal
+        best_v = jnp.take_along_axis(v, j[:, None], axis=1)
+        best_t = jnp.take_along_axis(t, j[:, None], axis=1)
+        best_r = jnp.take_along_axis(cand_r, j[:, None], axis=1)
+        out_v = jax.lax.dynamic_update_slice(out_v, best_v, (0, i))
+        out_t = jax.lax.dynamic_update_slice(out_t, best_t, (0, i))
+        out_r = jax.lax.dynamic_update_slice(out_r, best_r, (0, i))
+        sel = col == j[:, None]
+        v = jnp.where(sel, NEG_INF, v)
+        t = jnp.where(sel, EXHAUSTED, t)                     # never re-picked
+        return v, t, out_v, out_t, out_r
+
+    bq = scores.shape[0]
+    init = (cand_v, cand_t,
+            jnp.full((bq, k), NEG_INF, jnp.float32),
+            jnp.full((bq, k), EXHAUSTED, jnp.int32),
+            jnp.full((bq, k), ROW_SENTINEL, jnp.int32))
+    _, _, out_v, out_t, out_r = jax.lax.fori_loop(0, k, body, init)
+    return out_v, out_t, out_r
+
+
+def _kernel(emb_ref, q_ref, virt_ref, *rest,
+            k: int, block_n: int, block_q: int, quantized: bool):
+    if quantized:
+        scale_ref, out_v_ref, out_r_ref, run_v, run_t, run_r = rest
+    else:
+        out_v_ref, out_r_ref, run_v, run_t, run_r = rest
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        run_v[...] = jnp.full((block_q, k), NEG_INF, jnp.float32)
+        run_t[...] = jnp.full((block_q, k), EXHAUSTED, jnp.int32)
+        run_r[...] = jnp.full((block_q, k), ROW_SENTINEL, jnp.int32)
+
+    emb = emb_ref[...].astype(jnp.float32)                   # (BN, D) widen
+    q = q_ref[...].astype(jnp.float32)                       # (BQ, D)
+    scores = jax.lax.dot_general(                            # (BQ, BN) MXU
+        q, emb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if quantized:
+        # fused dequant: per-row scale on the score block, not the slab
+        scores = scores * scale_ref[...].astype(jnp.float32).T   # (1, BN)
+    virt = virt_ref[...]                                     # (BQ, BN)
+    scores = jnp.where(virt < NOT_PROBED, scores, NEG_INF)
+    base = nb * block_n + jax.lax.iota(jnp.int32, block_n)
+    v, t, r = _slab_merge_rows(scores, virt, base,
+                               run_v[...], run_t[...], run_r[...], k)
+    run_v[...] = v
+    run_t[...] = t
+    run_r[...] = r
+
+    @pl.when(nb == pl.num_programs(1) - 1)
+    def _done():
+        out_v_ref[...] = run_v[...]
+        out_r_ref[...] = run_r[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "block_q",
+                                             "interpret"))
+def slab_topk_pallas(emb, queries, virt, k: int, scales=None, *,
+                     block_n: int = 512, block_q: int = 8,
+                     interpret: bool = True):
+    """emb (N, D) f32/f16/int8, queries (Q, D) f32, virt (Q, N) int32,
+    scales (N, 1) f16/f32 or None -> (vals (Q, k) f32, rows (Q, k) int32).
+
+    Pads N and Q to block multiples internally; padded slab rows get
+    ``virt = NOT_PROBED`` so they never score, padded query rows are
+    sliced off.  Requires k <= N (the ops layer clamps).
+    """
+    n, d = emb.shape
+    nq = queries.shape[0]
+    block_q = max(1, min(block_q, nq))
+    n_pad = (-n) % block_n
+    if n_pad:
+        emb = jnp.pad(emb, ((0, n_pad), (0, 0)))
+        virt = jnp.pad(virt, ((0, 0), (0, n_pad)),
+                       constant_values=NOT_PROBED)
+        if scales is not None:
+            scales = jnp.pad(scales, ((0, n_pad), (0, 0)))
+    q_pad = (-nq) % block_q
+    if q_pad:
+        queries = jnp.pad(queries, ((0, q_pad), (0, 0)))
+        virt = jnp.pad(virt, ((0, q_pad), (0, 0)),
+                       constant_values=NOT_PROBED)
+    n_blocks = emb.shape[0] // block_n
+    q_blocks = queries.shape[0] // block_q
+
+    quantized = scales is not None
+    kernel = functools.partial(_kernel, k=k, block_n=block_n,
+                               block_q=block_q, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((block_n, d), lambda qi, ni: (ni, 0)),
+        pl.BlockSpec((block_q, d), lambda qi, ni: (qi, 0)),
+        pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),
+    ]
+    operands = [emb, queries, virt]
+    if quantized:
+        in_specs.append(pl.BlockSpec((block_n, 1), lambda qi, ni: (ni, 0)))
+        operands.append(scales)
+    out_v, out_r = pl.pallas_call(
+        kernel,
+        grid=(q_blocks, n_blocks),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((queries.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((queries.shape[0], k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    if q_pad:
+        out_v, out_r = out_v[:nq], out_r[:nq]
+    return out_v, out_r

@@ -1,0 +1,67 @@
+"""Public op: ragged multi-query top-k over a packed cluster slab.
+
+Dispatch mirrors ``ivf_topk.ops``:
+  * on TPU: the Pallas fused kernel (compiled);
+  * elsewhere (this CPU container): the pure-jnp oracle under jit (the
+    EdgeRAG runtime fast path) or the Pallas kernel in interpret mode
+    (exercised by tests).
+
+The slab may be fp32, fp16, or int8 (+ per-row ``scales`` (N, 1));
+quantized slabs are scored with fused dequantization — no fp32 copy of
+the slab is ever materialized (see ref.py for the exact contract).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ivf_topk.ops import on_tpu
+from repro.kernels.slab_topk.kernel import slab_topk_pallas
+from repro.kernels.slab_topk.ref import NOT_PROBED, slab_topk_ref
+
+__all__ = ["slab_topk", "NOT_PROBED", "ROW_PAD"]
+
+ROW_PAD = np.int32(2**30)    # row index of a padded output lane
+
+_jit_ref = jax.jit(slab_topk_ref, static_argnames=("k",))
+
+
+def slab_topk(emb, queries, virt, k: int, *, scales=None, impl: str = "auto"):
+    """emb (N, D) f32/f16/int8, queries (Q, D), virt (Q, N) int32,
+    scales (N, 1) or None -> (vals (Q, k) f32, rows (Q, k) int32).
+
+    One launch scores ALL queries against the packed slab; per query the
+    best k member rows (``virt < NOT_PROBED``) by (score desc, virt asc).
+    PADDING: lanes past a query's member count are NOT self-describing —
+    they carry ~NEG_INF (-1e30) scores and arbitrary in-range non-member
+    rows (``ROW_PAD`` appears only in the k > N overflow lanes).  Callers
+    MUST mask by the per-query member count (``SlabLayout.query_layout``'s
+    ``n_valid_seg``) before gathering ids; never detect padding from the
+    returned values.
+
+    impl: "auto" | "ref" | "pallas".
+    """
+    n = emb.shape[0]
+    nq = queries.shape[0]
+    if n == 0 or k == 0:
+        return (jnp.full((nq, k), -np.inf, jnp.float32),
+                jnp.full((nq, k), ROW_PAD, jnp.int32))
+    k_eff = min(k, n)
+    emb = jnp.asarray(emb)
+    queries = jnp.asarray(queries, jnp.float32)
+    virt = jnp.asarray(virt, jnp.int32)
+    if scales is not None:
+        scales = jnp.asarray(scales, jnp.float32)
+    if impl == "pallas" or (impl == "auto" and on_tpu()):
+        vals, rows = slab_topk_pallas(emb, queries, virt, k_eff, scales,
+                                      interpret=not on_tpu())
+    else:
+        vals, rows = _jit_ref(emb, queries, virt, k=k_eff, scales=scales)
+    if k_eff < k:
+        pad = k - k_eff
+        vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-np.inf)
+        rows = jnp.pad(rows, ((0, 0), (0, pad)), constant_values=ROW_PAD)
+    return vals, rows

@@ -159,9 +159,11 @@ def test_latency_accounting_consistency(stack, ds):
                           query_chars=int(ds.query_chars[0]))
     d = lat.as_dict()
     parts = (d["embed_query_s"] + d["centroid_search_s"] + d["l2_generate_s"]
-             + d["l2_storage_load_s"] + d["l2_cache_hit_s"]
-             + d["l2_mem_load_s"] + d["l2_search_s"])
+             + d["l2_storage_load_s"] + d["l2_dequant_s"]
+             + d["l2_cache_hit_s"] + d["l2_mem_load_s"] + d["l2_search_s"]
+             + d["l2_slab_pack_s"] + d["l2_fused_dequant_s"])
     assert abs(parts - d["retrieval_s"]) < 1e-12
+    assert d["l2_slab_pack_s"] > 0          # slab engine packed this batch
     assert lat.n_clusters_probed == 5
     assert (lat.n_generated + lat.n_storage_loads + lat.n_cache_hits
             == lat.n_clusters_probed)

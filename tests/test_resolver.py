@@ -202,7 +202,7 @@ def test_stale_cached_plan_payload_falls_back(ds):
 
 
 def test_sharded_scoring_route_single_device(ds):
-    """search_batch(mesh=...) routes scoring through sharded_topk_ip and
+    """search_batch(mesh=...) routes scoring through sharded_slab_topk and
     matches the unsharded ids (1-device mesh; the 8-device equivalence runs
     in test_sharded_retrieval.py's subprocess)."""
     mesh = jax.make_mesh((jax.device_count(),), ("data",))

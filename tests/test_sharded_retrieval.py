@@ -28,8 +28,9 @@ for n, d, q, k in [(1000, 64, 3, 10), (63, 32, 1, 5), (4096, 128, 2, 32)]:
     assert (idx == np.asarray(ri)).mean() > 0.95, (n, k)
 print("sharded retrieval OK")
 
-# EdgeRAG sharded scoring mode: search_batch(mesh=...) routes the resolved
-# cluster slabs through sharded_topk_ip; fp32 tier must match unsharded ids.
+# EdgeRAG sharded scoring mode: search_batch(mesh=...) row-shards the batch
+# slab through sharded_slab_topk (one collective per batch per
+# representation); fp32 tier must match unsharded ids.
 from repro.core import EdgeCostModel, EdgeRAGIndex
 from repro.data import generate_dataset
 
