@@ -2,10 +2,14 @@
 # Minimal CI: fast lane by default (seconds, not minutes); pass --full for
 # the whole tier-1 suite (~5 min); pass bench-smoke for a tiny-scale run of
 # the perf-trajectory benchmarks plus a schema check on their JSON outputs
-# (so the perf plumbing can't silently rot).
+# (so the perf plumbing can't silently rot); pass chaos-smoke for a
+# quick-scale fault-injection run (storage faults + stalls + deadlines)
+# that fails on any unhandled exception, unaccounted fault, or recall
+# loss at the 10%-fault arm.
 #   scripts/ci.sh              -> pytest -m "not slow"
 #   scripts/ci.sh --full       -> full suite
 #   scripts/ci.sh bench-smoke  -> quick benchmarks + BENCH_*.json key check
+#   scripts/ci.sh chaos-smoke  -> quick fault-tolerance bench + schema check
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -96,9 +100,45 @@ assert s["criteria"]["recall_ratio_ok"], \
 
 print("bench-smoke OK: BENCH JSON schemas intact")
 PY
+elif [[ "${1:-}" == "chaos-smoke" ]]; then
+    out="$(mktemp -d)"
+    trap 'rm -rf "$out"' EXIT
+    python -m benchmarks.fault_tolerance --quick \
+        --out "$out/BENCH_fault_tolerance.json"
+    python - "$out" <<'PY'
+import json, os, sys
+
+f = json.load(open(os.path.join(sys.argv[1], "BENCH_fault_tolerance.json")))
+for key in ("n_records", "n_queries", "nlist", "k", "nprobe", "slo_s",
+            "gap_mean_s", "deadline_s", "prefill_reserve_frac",
+            "churn_frac", "arms", "recall_ratio_vs_clean", "criteria"):
+    assert key in f, f"BENCH_fault_tolerance.json missing key: {key}"
+for arm in ("clean", "f01_stall", "f10_stall", "stall_heavy",
+            "stall_heavy_noshed"):
+    cell = f["arms"][arm]
+    for key in ("n_query_reqs", "p50_ttft_s", "p99_ttft_s", "mean_ttft_s",
+                "outcomes", "degradation", "injected", "io_stats",
+                "maintenance_quarantined", "unhandled_exceptions",
+                "recall_at10"):
+        assert key in cell, f"arm {arm} missing key: {key}"
+    for key in ("met", "degraded", "missed", "failed"):
+        assert key in cell["outcomes"], f"arm {arm} outcomes missing {key}"
+    # hard robustness floor: the retrieval stack must absorb every fault
+    assert cell["unhandled_exceptions"] == 0, \
+        f"arm {arm}: {cell['unhandled_exceptions']} unhandled exceptions"
+    st = cell["io_stats"]
+    assert (cell["injected"]["injected_total"] == st["failed_attempts"]
+            == st["retries"] + st["exhausted"]), \
+        f"arm {arm}: injected faults not fully accounted"
+ratio = f["recall_ratio_vs_clean"]["f10_stall"]
+assert ratio >= 0.99, \
+    f"recall under 10% faults fell to {ratio:.3f}x of fault-free"
+print("chaos-smoke OK: faults absorbed, accounted, recall preserved")
+PY
 elif [[ -z "${1:-}" ]]; then
     python -m pytest -q -m "not slow"
 else
-    echo "unknown lane: $1 (expected: no arg, --full, or bench-smoke)" >&2
+    echo "unknown lane: $1 (expected: no arg, --full, bench-smoke," \
+         "or chaos-smoke)" >&2
     exit 2
 fi

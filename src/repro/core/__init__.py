@@ -10,6 +10,8 @@ from repro.core.cache_policy import (CostAwareLFUCache,  # noqa
                                      MinLatencyThresholdController)
 from repro.core.costs import EdgeCostModel, LatencyBreakdown  # noqa
 from repro.core.edgerag import EdgeCluster, EdgeRAGIndex  # noqa
+from repro.core.faults import (CorruptPayloadError,  # noqa
+                               DegradationPolicy, FaultInjector, IOOutcome)
 from repro.core.flat_index import FlatIndex  # noqa
 from repro.core.ivf_index import IVFIndex  # noqa
 from repro.core.kmeans import kmeans  # noqa

@@ -112,6 +112,9 @@ class LatencyBreakdown:
     # packed-slab scoring engine (owner-charged, once per unique cluster):
     l2_slab_pack_s: float = 0.0         # compact payload copy into the slab
     l2_fused_dequant_s: float = 0.0     # in-kernel fp16/int8 decode
+    # failure model (core/faults.py) — zero on the fault-free path:
+    l2_stall_s: float = 0.0             # injected storage stall tail (I/O)
+    l2_retry_backoff_s: float = 0.0     # modeled retry exponential backoff
     wall_s: float = 0.0
     n_clusters_probed: int = 0
     n_generated: int = 0
@@ -119,6 +122,10 @@ class LatencyBreakdown:
     n_cache_hits: int = 0
     n_shared_hits: int = 0      # batched search: cluster resolved by a peer
     chars_embedded: int = 0
+    # degradation ladder accounting (core/faults.py):
+    retries: int = 0            # storage read attempts that were retried
+    degraded_clusters: int = 0  # probes shed / regens skipped under deadline
+    stale_served: int = 0       # stale payloads scored instead of regenerated
 
     @property
     def retrieval_s(self) -> float:
@@ -126,7 +133,8 @@ class LatencyBreakdown:
                 + self.l2_generate_s + self.l2_storage_load_s
                 + self.l2_dequant_s + self.l2_cache_hit_s
                 + self.l2_mem_load_s + self.l2_search_s
-                + self.l2_slab_pack_s + self.l2_fused_dequant_s)
+                + self.l2_slab_pack_s + self.l2_fused_dequant_s
+                + self.l2_stall_s + self.l2_retry_backoff_s)
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self) | {"retrieval_s": self.retrieval_s}

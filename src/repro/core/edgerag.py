@@ -107,6 +107,7 @@ import numpy as np
 from repro.core.cache_policy import (CostAwareLFUCache,
                                      MinLatencyThresholdController)
 from repro.core.costs import EdgeCostModel, LatencyBreakdown, WallTimer
+from repro.core.faults import DegradationPolicy
 from repro.core.kmeans import kmeans
 from repro.core.maintenance import (OP_DROP_STORE, OP_MERGE, OP_RESTORE,
                                     OP_SPLIT, MaintenanceScheduler)
@@ -261,14 +262,55 @@ class EdgeRAGIndex:
                  and self.clusters[int(c)].size > 0][:nprobe]
                 for qi in range(queries.shape[0])]
 
+    def _plan_with_deadlines(self, probed_per_q: List[List[int]],
+                             deadlines: Optional[Sequence[Optional[float]]],
+                             policy: Optional[DegradationPolicy],
+                             query_chars: Optional[Sequence[int]]
+                             ) -> ResolutionPlan:
+        """Plan the probe lists, applying degradation rung 1 (shrink
+        effective nprobe) first when deadline budgets are present.  The
+        deadlines / policy / shed counts ride on the plan so execute-time
+        rungs 2-3 and ``search_batch``'s accounting see them."""
+        shed: Optional[List[int]] = None
+        if deadlines is not None:
+            nq = len(probed_per_q)
+            assert len(deadlines) == nq, \
+                f"{len(deadlines)} deadlines for {nq} queries"
+            policy = policy or DegradationPolicy()
+            centroid_s = (self.cost.mem_load_latency(self.centroids.nbytes)
+                          + self.cost.search_latency(self.nlist, self.dim))
+            base = [centroid_s
+                    + (self.cost.embed_latency(int(query_chars[qi]))
+                       if query_chars is not None and query_chars[qi]
+                       else 0.0)
+                    for qi in range(nq)]
+            probed_per_q, shed = policy.trim_probes(self, probed_per_q,
+                                                    deadlines, base)
+        plan = self.resolver.plan(probed_per_q)
+        if deadlines is not None:
+            plan.deadlines = list(deadlines)
+            plan.policy = policy
+            plan.shed_probes = shed
+        return plan
+
     def plan_batch(self, query_embs: np.ndarray, nprobe: int, *,
-                   prefetch_storage: bool = False) -> ResolutionPlan:
+                   prefetch_storage: bool = False,
+                   deadlines: Optional[Sequence[Optional[float]]] = None,
+                   policy: Optional[DegradationPolicy] = None,
+                   query_chars: Optional[Sequence[int]] = None
+                   ) -> ResolutionPlan:
         """Probe + plan without executing — the serving engine uses this to
         issue the plan's storage loads before prompt assembly.  Hand the
         plan to ``search_batch(plan=...)`` to execute it (the plan-time
-        cache lookups already happened; they are not repeated)."""
+        cache lookups already happened; they are not repeated).
+
+        ``deadlines``: optional per-query retrieval budgets (edge seconds,
+        None entries = no deadline); the plan applies the degradation
+        ladder's rung 1 (probe trimming, ``DegradationPolicy``) now and
+        carries the budgets so execution can shed further."""
         queries = np.atleast_2d(np.asarray(query_embs, np.float32))
-        plan = self.resolver.plan(self._probe(queries, nprobe))
+        plan = self._plan_with_deadlines(self._probe(queries, nprobe),
+                                         deadlines, policy, query_chars)
         if prefetch_storage:
             self.resolver.prefetch(plan)
         return plan
@@ -276,6 +318,8 @@ class EdgeRAGIndex:
     def search_batch(self, query_embs: np.ndarray, k: int, nprobe: int,
                      query_chars: Optional[Sequence[int]] = None,
                      *, plan: Optional[ResolutionPlan] = None,
+                     deadlines: Optional[Sequence[Optional[float]]] = None,
+                     policy: Optional[DegradationPolicy] = None,
                      mesh=None, shard_axis: str = "data"
                      ) -> Tuple[np.ndarray, np.ndarray,
                                 List[LatencyBreakdown]]:
@@ -290,9 +334,14 @@ class EdgeRAGIndex:
 
         ``plan``: a precomputed :class:`ResolutionPlan` from
         :meth:`plan_batch` (same queries / nprobe) — skips re-probing and
-        re-planning.  ``mesh``: row-shard the batch slab over the mesh's
-        ``shard_axis`` and score through ``sharded_slab_topk`` — one
-        collective per batch per representation.
+        re-planning.  ``deadlines`` / ``policy``: per-query retrieval
+        budgets and degradation ladder knobs (core/faults.py); with a
+        precomputed plan, pass the deadlines to :meth:`plan_batch` instead
+        (they ride on the plan) — passing them here only attaches them if
+        the plan carries none (rung 1 can no longer trim a fixed plan).
+        ``mesh``: row-shard the batch slab over the mesh's ``shard_axis``
+        and score through ``sharded_slab_topk`` — one collective per batch
+        per representation.
         """
         queries = np.atleast_2d(np.asarray(query_embs, np.float32))
         nq = queries.shape[0]
@@ -308,7 +357,12 @@ class EdgeRAGIndex:
                         lat.embed_query_s = self.cost.embed_latency(int(qc))
             # Step 1: probe (ONE fused centroid top-k) + plan the tiers
             if plan is None:
-                plan = self.resolver.plan(self._probe(queries, nprobe))
+                plan = self._plan_with_deadlines(
+                    self._probe(queries, nprobe), deadlines, policy,
+                    query_chars)
+            elif deadlines is not None and plan.deadlines is None:
+                plan.deadlines = list(deadlines)
+                plan.policy = policy
             probed_per_q = plan.probed_per_q
             assert len(probed_per_q) == nq, \
                 f"plan covers {len(probed_per_q)} queries, got {nq}"
@@ -317,6 +371,11 @@ class EdgeRAGIndex:
             for qi in range(nq):
                 lats[qi].n_clusters_probed = len(probed_per_q[qi])
                 lats[qi].centroid_search_s = centroid_s
+            if plan.shed_probes:
+                # rung-1 sheds happened at plan time, before these
+                # LatencyBreakdowns existed — account for them now
+                for qi, n_shed in enumerate(plan.shed_probes):
+                    lats[qi].degraded_clusters += n_shed
             # Steps 2-5: execute the plan in RAW mode and PACK — batched
             # raw-codec storage get_many_raw, cache payloads, coalesced
             # regeneration, every unique cluster packed exactly once into
@@ -401,14 +460,18 @@ class EdgeRAGIndex:
         return out_ids, out_vals, lats
 
     def search(self, query_emb: np.ndarray, k: int, nprobe: int,
-               query_chars: int = 0
+               query_chars: int = 0, *,
+               deadline_s: Optional[float] = None,
+               policy: Optional[DegradationPolicy] = None
                ) -> Tuple[np.ndarray, np.ndarray, LatencyBreakdown]:
         """Single query — the degenerate batch of one."""
         query = np.atleast_2d(np.asarray(query_emb, np.float32))
         assert query.shape[0] == 1
         ids, vals, lats = self.search_batch(
             query, k, nprobe,
-            query_chars=[query_chars] if query_chars else None)
+            query_chars=[query_chars] if query_chars else None,
+            deadlines=None if deadline_s is None else [deadline_s],
+            policy=policy)
         return ids, vals, lats[0]
 
     # ------------------------------------------------------------------
@@ -455,6 +518,34 @@ class EdgeRAGIndex:
         self._dispatch_maintenance(ops)
         # a synchronous split may have moved the chunk to the appended slot
         return self._chunk_cluster[int(chunk_id)]
+
+    def update(self, chunk_id: int, text: str) -> Optional[int]:
+        """Re-embed one chunk IN PLACE (§5.4 online update): same id, same
+        cluster, same row count — only the content moved.  Returns the
+        cluster id, or None for an unknown chunk.  The cluster's generation
+        bumps, so cached embeddings are invalidated and any stored copy
+        goes stale (a deferred restore refreshes it; until then the
+        degradation ladder may serve the old copy FLAGGED as stale — unlike
+        insert/remove churn it still row-aligns with the cluster)."""
+        cid = self._chunk_cluster.get(int(chunk_id))
+        if cid is None:
+            return None
+        cl = self.clusters[cid]
+        cl.char_count += len(text) - self._chunk_chars.get(int(chunk_id), 0)
+        self._chunk_chars[int(chunk_id)] = len(text)
+        cl.generation += 1
+        cl.gen_latency_est = self.cost.embed_latency(cl.char_count)
+        self.cache.invalidate(cid)                      # stale embeddings
+        if cl.char_count > self.split_max_chars:
+            ops = [(OP_SPLIT, cid)]                     # supersedes restore
+        elif self.store_heavy and cl.gen_latency_est > self.slo_s:
+            ops = [(OP_RESTORE, cid)]                   # refresh stale copy
+        elif cl.stored:
+            ops = [(OP_DROP_STORE, cid)]                # became cheap
+        else:
+            ops = []
+        self._dispatch_maintenance(ops)
+        return cid
 
     def remove(self, chunk_id: int) -> Optional[int]:
         # O(1) lookup through the chunk->cluster map (kept consistent by

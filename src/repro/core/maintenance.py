@@ -60,6 +60,10 @@ class MaintenanceReport:
     """What one :meth:`MaintenanceScheduler.drain` call did."""
     executed: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
     skipped: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+    failed: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+    # ^ ops that raised this drain (re-queued, or quarantined on the Nth)
+    quarantined: List[Tuple[str, int]] = \
+        dataclasses.field(default_factory=list)
     edge_s: float = 0.0          # modeled edge seconds spent this drain
     remaining: int = 0           # ops still queued when the budget ran out
 
@@ -78,20 +82,30 @@ class MaintenanceScheduler:
     re-enqueueing an op refreshes its stamp instead of duplicating it.
     """
 
-    def __init__(self, index, budget_s_per_step: Optional[float] = None):
+    def __init__(self, index, budget_s_per_step: Optional[float] = None,
+                 max_op_failures: int = 3):
         self.index = index
         self.budget_s_per_step = budget_s_per_step
+        self.max_op_failures = max_op_failures
         self._queue: "OrderedDict[Tuple[str, int], MaintenanceOp]" = \
             OrderedDict()
+        self._failures: Dict[Tuple[str, int], int] = {}
+        self.quarantined: "OrderedDict[Tuple[str, int], str]" = OrderedDict()
+        # ^ (kind, cid) -> last error; these ops stopped retrying
         self.total_edge_s = 0.0
         self.n_executed = 0
         self.n_skipped = 0
+        self.n_failures = 0          # individual op failures (raises) seen
 
     # ------------------------------------------------------------------
     # queue
     # ------------------------------------------------------------------
     def enqueue(self, kind: str, cid: int):
         key = (kind, cid)
+        # a fresh enqueue is new evidence the op is wanted: lift any
+        # quarantine and give it a clean failure budget
+        self.quarantined.pop(key, None)
+        self._failures.pop(key, None)
         self._queue.pop(key, None)      # refresh: move to the back
         self._queue[key] = MaintenanceOp(
             kind, cid, self.index.clusters[cid].generation)
@@ -99,6 +113,8 @@ class MaintenanceScheduler:
     def clear(self):
         """Drop every queued op (index rebuilds)."""
         self._queue.clear()
+        self._failures.clear()
+        self.quarantined.clear()
 
     def __len__(self) -> int:
         return len(self._queue)
@@ -218,20 +234,32 @@ class MaintenanceScheduler:
         if budget_s is None:
             budget_s = self.budget_s_per_step
         report = MaintenanceReport()
+        failed_this_drain: set = set()
         while self._queue:
             key, op = next(iter(self._queue.items()))
-            kind = self._revalidate(op)
+            if key in failed_this_drain:
+                break   # only ops that already raised this drain remain
+            try:
+                kind = self._revalidate(op)
+                est = (0.0 if kind is None
+                       else self.estimate_cost_s(kind, op.cid))
+            except Exception as e:      # noqa: BLE001 — isolate the op
+                self._record_failure(key, op, e, report, failed_this_drain)
+                continue
             if kind is None:
                 del self._queue[key]
                 report.skipped.append((op.kind, op.cid))
                 self.n_skipped += 1
                 continue
-            est = self.estimate_cost_s(kind, op.cid)
             if (budget_s is not None and (strict or report.executed)
                     and report.edge_s + est > budget_s):
                 break                      # budget spent (≥1 op ran unless strict)
             del self._queue[key]
-            self._apply(kind, op.cid)
+            try:
+                self._apply(kind, op.cid)
+            except Exception as e:      # noqa: BLE001 — isolate the op
+                self._record_failure(key, op, e, report, failed_this_drain)
+                continue
             report.executed.append((kind, op.cid))
             report.edge_s += est
             self.n_executed += 1
@@ -239,11 +267,35 @@ class MaintenanceScheduler:
         self.total_edge_s += report.edge_s
         return report
 
+    def _record_failure(self, key: Tuple[str, int], op: MaintenanceOp,
+                        err: Exception, report: MaintenanceReport,
+                        failed_this_drain: set):
+        """One op raised: the queue must keep draining.  The op goes to the
+        BACK for another try on a later drain, and after
+        ``max_op_failures`` raises it is quarantined (kept out of the
+        queue, last error recorded) — a poison op can wedge neither this
+        drain nor the scheduler.  A fresh :meth:`enqueue` of the same
+        (kind, cid) lifts the quarantine."""
+        self.n_failures += 1
+        report.failed.append(key)
+        failed_this_drain.add(key)
+        self._queue.pop(key, None)
+        n = self._failures.get(key, 0) + 1
+        self._failures[key] = n
+        if n >= self.max_op_failures:
+            self.quarantined[key] = f"{type(err).__name__}: {err}"
+            self._failures.pop(key, None)
+            report.quarantined.append(key)
+        else:
+            self._queue[key] = op
+
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
         return {
             "pending": len(self._queue),
             "executed": self.n_executed,
             "skipped": self.n_skipped,
+            "failures": self.n_failures,
+            "quarantined": len(self.quarantined),
             "total_edge_s": self.total_edge_s,
         }

@@ -64,6 +64,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.costs import LatencyBreakdown
+from repro.core.faults import DegradationPolicy, IOOutcome
 from repro.kernels.slab_topk.ops import NOT_PROBED
 
 TIER_STORAGE = "storage"
@@ -94,6 +95,19 @@ class ResolutionPlan:
     prefetched: Optional[Dict[int, Dict[str, np.ndarray]]] = None
     # ^ early storage loads — RAW codec payloads (never decoded here; the
     #   slab scorer consumes them via fused dequant)
+    io_outcomes: Optional[Dict[int, IOOutcome]] = None
+    # ^ prefetch-time per-key I/O costs (retries / stalls / backoff): the
+    #   charges belong to the owning query's LatencyBreakdown, which only
+    #   exists at execute time
+    deadlines: Optional[List[Optional[float]]] = None
+    # ^ per-query retrieval deadline budgets (edge seconds; None = no
+    #   deadline).  Set when the caller requested deadline-aware serving.
+    policy: Optional[DegradationPolicy] = None
+    # ^ the degradation ladder knobs; only consulted when deadlines is set
+    shed_probes: List[int] = dataclasses.field(default_factory=list)
+    # ^ rung-1 sheds per query (probes dropped before planning), recorded
+    #   here because the per-query LatencyBreakdowns don't exist at plan
+    #   time; search_batch folds them into ``degraded_clusters``
 
     def fresh(self, cid: int, cluster) -> bool:
         """True iff ``cluster`` has not mutated since this plan was made
@@ -354,10 +368,13 @@ class ClusterResolver:
         them (decode stays fused into scoring); the engine overlaps their
         modeled I/O seconds with prefill."""
         if plan.storage_clusters and plan.prefetched is None:
-            loaded = self.index.storage.get_many_raw(plan.storage_clusters)
+            outcomes: List[IOOutcome] = []
+            loaded = self.index.storage.get_many_raw(plan.storage_clusters,
+                                                     outcomes=outcomes)
             plan.prefetched = {cid: payload for cid, payload
                                in zip(plan.storage_clusters, loaded)
                                if payload is not None}
+            plan.io_outcomes = {o.key: o for o in outcomes}
         return plan
 
     # ------------------------------------------------------------------
@@ -380,13 +397,33 @@ class ClusterResolver:
         resolved: Dict[int, object] = {}
         regen_groups = [list(g) for g in plan.regen_groups]
         fallback: List[int] = []      # stale / vanished since plan time
+        deadlines = plan.deadlines
+        policy = plan.policy if deadlines is not None else None
+        if policy is None and deadlines is not None:
+            policy = DegradationPolicy()
+
+        def _budget_left(qi: int) -> Optional[float]:
+            """Remaining deadline budget of one query, against the edge
+            seconds its LatencyBreakdown has accrued SO FAR this batch
+            (retries and stalls charged earlier in this execute included)."""
+            if deadlines is None or deadlines[qi] is None:
+                return None
+            return deadlines[qi] - lats[qi].retrieval_s
+
         if plan.storage_clusters:
             if plan.prefetched is not None:
                 loaded = [plan.prefetched.get(c)
                           for c in plan.storage_clusters]
+                outcomes = plan.io_outcomes or {}
             else:
-                loaded = ix.storage.get_many_raw(plan.storage_clusters)
+                olist: List[IOOutcome] = []
+                loaded = ix.storage.get_many_raw(plan.storage_clusters,
+                                                 outcomes=olist)
+                outcomes = {o.key: o for o in olist}
             for cid, payload in zip(plan.storage_clusters, loaded):
+                # fault charges (retries / stalls / backoff) land on the
+                # owner whether or not the read ultimately succeeded
+                self._charge_io(lats[plan.owner[cid]], outcomes.get(cid))
                 # Staleness guard: a prefetched payload is only scoreable if
                 # the cluster's generation never moved after the plan; an
                 # execute-time load only if the storage copy reflects the
@@ -425,6 +462,26 @@ class ClusterResolver:
             # scoring id map
             cl = ix.clusters[cid]
             if not plan.fresh(cid, cl) or len(embs) != cl.size:
+                qi = plan.owner[cid]
+                budget = _budget_left(qi)
+                if (policy is not None and policy.serve_stale
+                        and budget is not None
+                        and cl.gen_latency_est > budget
+                        and len(embs) == cl.size):
+                    # ladder rung 3: the deadline cannot afford the
+                    # regeneration, and the stale payload still row-aligns
+                    # with the cluster (same-size mutation) — score it,
+                    # flagged, and evict it so the next unpressured batch
+                    # regenerates a fresh copy
+                    lat = lats[qi]
+                    lat.l2_cache_hit_s += ix.cost.mem_load_latency(
+                        embs.nbytes, resident_bytes=ix.memory_bytes())
+                    lat.n_cache_hits += 1
+                    lat.stale_served += 1
+                    ix.cache.invalidate(cid)
+                    resolved[cid] = (SlabPayload("fp32", embs) if raw
+                                     else embs)
+                    continue
                 ix.cache.invalidate(cid)   # don't let the stale entry recur
                 fallback.append(cid)
                 continue
@@ -436,6 +493,29 @@ class ClusterResolver:
         if fallback:
             regen_groups.append(fallback)
         heal = set(fallback) | set(plan.restore)
+        # ladder rung 2: an owner whose queued regenerations cannot fit its
+        # remaining budget sheds the MOST EXPENSIVE ones first; shed
+        # clusters fall to _resolve_degraded (stale stored copy when one
+        # still row-aligns, else zero rows) and never regenerate
+        shed: set = set()
+        if policy is not None and policy.shed_regen:
+            per_owner: Dict[int, List[int]] = {}
+            for group in regen_groups:
+                for cid in group:
+                    cl = ix.clusters[cid]
+                    if cl.active and cl.size > 0:
+                        per_owner.setdefault(plan.owner[cid], []).append(cid)
+            for qi, cids in per_owner.items():
+                budget = _budget_left(qi)
+                if budget is None:
+                    continue
+                total = sum(ix.clusters[c].gen_latency_est for c in cids)
+                for c in sorted(cids,
+                                key=lambda c: -ix.clusters[c].gen_latency_est):
+                    if total <= budget:
+                        break
+                    shed.add(c)
+                    total -= ix.clusters[c].gen_latency_est
         for group in regen_groups:
             # clusters merged away (or emptied) since plan time have no
             # text to regenerate: they resolve to zero rows and drop out
@@ -446,6 +526,11 @@ class ClusterResolver:
                 empty = np.zeros((0, ix.dim), np.float32)
                 resolved[c] = SlabPayload("fp32", empty) if raw else empty
             group = [c for c in group if c not in dead]
+            if shed:
+                for cid in group:
+                    if cid in shed:
+                        self._resolve_degraded(cid, plan, lats, resolved, raw)
+                group = [c for c in group if c not in shed]
             if not group:
                 continue
             for cid, sub, chars in self._regen_group(group):
@@ -474,6 +559,53 @@ class ClusterResolver:
                         min_latency_threshold=ix.threshold.threshold)
                 resolved[cid] = SlabPayload("fp32", sub) if raw else sub
         return resolved
+
+    @staticmethod
+    def _charge_io(lat: LatencyBreakdown,
+                   outcome: Optional[IOOutcome]) -> None:
+        """Land one read's fault costs (injected stall seconds, modeled
+        retry backoff, retry count) on the owning query."""
+        if outcome is None:
+            return
+        lat.l2_stall_s += outcome.stall_s
+        lat.l2_retry_backoff_s += outcome.backoff_s
+        lat.retries += outcome.retries
+
+    def _resolve_degraded(self, cid: int, plan: ResolutionPlan,
+                          lats: List[LatencyBreakdown],
+                          resolved: Dict[int, object], raw: bool) -> None:
+        """Resolve one rung-2-shed cluster without regenerating: serve the
+        STALE stored copy flagged stale when one exists and still
+        row-aligns with the cluster (rung 3 via storage), else skip the
+        cluster entirely — zero rows, counted in ``degraded_clusters``."""
+        ix = self.index
+        cl = ix.clusters[cid]
+        lat = lats[plan.owner[cid]]
+        policy = plan.policy or DegradationPolicy()
+        if policy.serve_stale and cl.stored and cid in ix.storage:
+            outcomes: List[IOOutcome] = []
+            payload = ix.storage.get_many_raw([cid], outcomes=outcomes)[0]
+            self._charge_io(lat, outcomes[0])
+            if (payload is not None
+                    and ix.storage.payload_rows(payload) == cl.size):
+                try:
+                    nbytes = ix.storage.stored_bytes(cid)
+                except KeyError:
+                    nbytes = sum(a.nbytes for a in payload.values())
+                lat.l2_storage_load_s += ix.cost.storage_load_latency(nbytes)
+                lat.n_storage_loads += 1
+                lat.stale_served += 1
+                if raw:
+                    resolved[cid] = SlabPayload.from_raw(payload)
+                    return
+                embs = ix.storage.decode(payload)
+                if ix.storage.codec != "fp32":
+                    lat.l2_dequant_s += ix.cost.dequant_latency(embs.size)
+                resolved[cid] = embs
+                return
+        lat.degraded_clusters += 1
+        empty = np.zeros((0, ix.dim), np.float32)
+        resolved[cid] = SlabPayload("fp32", empty) if raw else empty
 
     # ------------------------------------------------------------------
     # packed-slab execution (the search_batch scoring engine)

@@ -28,6 +28,31 @@ exactly as stored — ``{"emb": f32|f16}`` or ``{"q": int8, "scale": f16}``
 mode hands out the live stored arrays, not copies); ``payload_rows`` gives
 the row count without decoding and ``decode`` turns a raw payload into the
 f32 matrix ``get`` would have returned.
+
+FAILURE MODEL (core/faults.py): every ``put`` stores a per-key CRC-32
+checksum alongside the payload (a ``"crc"`` member, stripped before any
+payload reaches a caller and excluded from byte accounting) and every load
+verifies it, so a bit-flipped or truncated blob — real or injected — is
+always detected, never silently scored.  ``get`` / ``get_many`` /
+``get_many_raw`` retry failed reads up to ``retry_limit`` times with
+exponential backoff (``backoff_base_s * 2**attempt`` MODELED edge seconds,
+no real sleep); per-key costs land in the caller-supplied
+:class:`~repro.core.faults.IOOutcome` list and aggregate in ``io_stats``.
+After retries exhaust, the read degrades to a missing key (``None`` /
+``KeyError``) so callers fall back to regeneration; a checksum failure
+that survives every retry additionally QUARANTINE-DROPS the blob, so the
+resolver's Alg. 1 self-heal re-persists a fresh copy instead of re-reading
+rot forever.  A genuinely absent key is returned immediately without
+retries (today's semantics).  Setting ``self.faults`` to a
+:class:`~repro.core.faults.FaultInjector` makes reads go through its
+deterministic fault/stall model; ``None`` (default) leaves the fast path
+byte-identical to the pre-fault-model backend.
+
+Disk-mode ``put`` is CRASH-SAFE: the payload is written to a temp file in
+the same directory and atomically ``os.replace``d over the key's path, so
+an interrupted write can never leave a torn payload behind (and a torn
+file from an older writer is caught by the checksum / container parse and
+degrades like any corrupt blob).
 """
 from __future__ import annotations
 
@@ -35,20 +60,37 @@ import os
 import re
 import tempfile
 import zipfile
+import zlib
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.faults import (CorruptPayloadError, FaultInjector,
+                               InjectedFault, IOOutcome)
+
 CODECS = ("fp32", "fp16", "int8")
 
 _CLUSTER_FILE = re.compile(r"^cluster_(\d+)\.npz$")
+_CHECKSUM_KEY = "crc"
+
+
+def payload_checksum(payload: Dict[str, np.ndarray]) -> int:
+    """CRC-32 over the payload's arrays (name, dtype, shape, data) — any
+    single bit flip or truncation changes it."""
+    crc = 0
+    for name in sorted(payload):
+        a = np.ascontiguousarray(payload[name])
+        crc = zlib.crc32(f"{name}:{a.dtype.str}:{a.shape}".encode(), crc)
+        crc = zlib.crc32(a.view(np.uint8).reshape(-1), crc)
+    return crc
 
 
 class StorageBackend:
     """Keyed blob store for per-cluster embedding matrices."""
 
     def __init__(self, mode: str = "memory", root: Optional[str] = None,
-                 codec: str = "fp32"):
+                 codec: str = "fp32", *, retry_limit: int = 3,
+                 backoff_base_s: float = 0.002):
         assert mode in ("memory", "disk")
         assert codec in CODECS, f"codec must be one of {CODECS}, got {codec}"
         self.mode = mode
@@ -59,6 +101,14 @@ class StorageBackend:
         if mode == "disk":
             self.root = root or tempfile.mkdtemp(prefix="edgerag_store_")
             os.makedirs(self.root, exist_ok=True)
+        # failure model (module docstring): injector hook + retry policy
+        self.faults: Optional[FaultInjector] = None
+        self.retry_limit = retry_limit
+        self.backoff_base_s = backoff_base_s
+        self.io_stats: Dict[str, float] = {
+            "reads": 0, "verified": 0, "failed_attempts": 0, "retries": 0,
+            "exhausted": 0, "corrupt_dropped": 0, "backoff_s": 0.0,
+            "stall_s": 0.0}
 
     # ---- codec ----------------------------------------------------------
     def _encode(self, emb: np.ndarray) -> Dict[str, np.ndarray]:
@@ -94,46 +144,145 @@ class StorageBackend:
         return os.path.join(self.root, f"cluster_{key}.npz")
 
     def _load(self, key: int) -> Optional[Dict[str, np.ndarray]]:
+        """Raw physical read (checksum member included).  A present-but-
+        unreadable disk blob (torn container) raises
+        :class:`CorruptPayloadError` instead of propagating zip/npy
+        internals."""
         if self.mode == "memory":
             return self._mem.get(key)
         path = self._path(key)
         if not os.path.exists(path):
             return None
-        with np.load(path) as z:
-            return {name: z[name] for name in z.files}
+        try:
+            with np.load(path) as z:
+                return {name: z[name] for name in z.files}
+        except Exception as e:
+            raise CorruptPayloadError(f"unreadable blob for key {key}: {e}")
+
+    # ---- verified / retried reads ----------------------------------------
+    def _read_once(self, key: int, outcome: IOOutcome
+                   ) -> Optional[Dict[str, np.ndarray]]:
+        """One read attempt: physical load, injected faults, checksum
+        verification.  Returns the CRC-stripped payload, ``None`` for a
+        genuinely absent key, or raises the attempt's failure."""
+        payload = self._load(key)
+        if payload is None:
+            return None
+        if self.faults is not None:
+            payload = self.faults.perturb(key, payload, outcome)
+        crc = payload.get(_CHECKSUM_KEY)
+        if crc is None:                 # legacy blob: unverifiable
+            return payload
+        body = {k: v for k, v in payload.items() if k != _CHECKSUM_KEY}
+        if payload_checksum(body) != int(np.asarray(crc).reshape(-1)[0]):
+            raise CorruptPayloadError(key)
+        self.io_stats["verified"] += 1
+        return body
+
+    def _load_checked(self, key: int, outcome: IOOutcome
+                      ) -> Optional[Dict[str, np.ndarray]]:
+        """Bounded retry-with-exponential-backoff around :meth:`_read_once`
+        (module docstring).  Backoff is MODELED edge seconds recorded on
+        ``outcome``, never a real sleep."""
+        self.io_stats["reads"] += 1
+        last_err: Optional[str] = None
+        for attempt in range(self.retry_limit + 1):
+            if attempt:
+                backoff = self.backoff_base_s * (2 ** (attempt - 1))
+                outcome.retries += 1
+                outcome.backoff_s += backoff
+                self.io_stats["retries"] += 1
+                self.io_stats["backoff_s"] += backoff
+            try:
+                payload = self._read_once(key, outcome)
+            except CorruptPayloadError:
+                last_err = "corrupt"
+            except InjectedFault as e:
+                last_err = "io" if isinstance(e, IOError) else "missing"
+            else:
+                if payload is not None:
+                    self.io_stats["stall_s"] += outcome.stall_s
+                    return payload
+                # genuinely absent (the blob is not there, faulty or not):
+                # retrying cannot help — degrade immediately, as before
+                outcome.ok = False
+                outcome.error = "missing"
+                self.io_stats["stall_s"] += outcome.stall_s
+                return None
+            self.io_stats["failed_attempts"] += 1
+        outcome.ok = False
+        outcome.error = last_err
+        self.io_stats["exhausted"] += 1
+        self.io_stats["stall_s"] += outcome.stall_s
+        if last_err == "corrupt":
+            # quarantine-drop the rotten blob: the caller regenerates and
+            # the resolver's Alg. 1 self-heal re-persists a fresh copy
+            self.io_stats["corrupt_dropped"] += 1
+            self.delete(key)
+        return None
 
     # ---- public API ------------------------------------------------------
     def put(self, key: int, embeddings: np.ndarray) -> int:
-        """Returns encoded (stored) byte size."""
+        """Returns encoded (stored) byte size (checksum excluded — the CRC
+        is metadata, not payload).  Disk mode writes are atomic: temp file
+        + ``os.replace``, so a crash mid-write never tears the blob."""
         payload = self._encode(embeddings)
         self._nbytes[key] = sum(a.nbytes for a in payload.values())
+        stored = dict(payload)
+        stored[_CHECKSUM_KEY] = np.array([payload_checksum(payload)],
+                                         np.uint32)
         if self.mode == "memory":
-            self._mem[key] = payload
+            self._mem[key] = stored
         else:
-            np.savez(self._path(key), **payload)
+            path = self._path(key)
+            tmp = path + ".tmp"
+            try:
+                with open(tmp, "wb") as f:
+                    np.savez(f, **stored)
+                os.replace(tmp, path)
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.remove(tmp)
+                raise
         return self._nbytes[key]
 
     def get(self, key: int) -> np.ndarray:
-        payload = self._load(key)
+        payload = self._load_checked(key, IOOutcome(key))
         if payload is None:
             raise KeyError(key)
         return self._decode(payload)
 
-    def get_many(self, keys: Sequence[int]) -> List[Optional[np.ndarray]]:
-        """Batched load, results in ``keys`` order; a missing key yields
-        ``None`` (callers fall back to regeneration instead of crashing)."""
+    def get_many(self, keys: Sequence[int],
+                 outcomes: Optional[List[IOOutcome]] = None
+                 ) -> List[Optional[np.ndarray]]:
+        """Batched load, results in ``keys`` order; a missing key — or one
+        whose reads exhausted their retries — yields ``None`` (callers fall
+        back to regeneration instead of crashing).  ``outcomes`` collects
+        one :class:`IOOutcome` per key (retries / stall / backoff)."""
         out: List[Optional[np.ndarray]] = []
         for key in keys:
-            payload = self._load(key)
+            o = IOOutcome(key)
+            payload = self._load_checked(key, o)
+            if outcomes is not None:
+                outcomes.append(o)
             out.append(None if payload is None else self._decode(payload))
         return out
 
-    def get_many_raw(self, keys: Sequence[int]
+    def get_many_raw(self, keys: Sequence[int],
+                     outcomes: Optional[List[IOOutcome]] = None
                      ) -> List[Optional[Dict[str, np.ndarray]]]:
         """Batched load of UNDECODED codec payloads, results in ``keys``
-        order, missing key -> ``None`` (see module docstring: payloads are
-        read-only; the slab scorer consumes them via fused dequant)."""
-        return [self._load(key) for key in keys]
+        order, missing/exhausted key -> ``None`` (see module docstring:
+        payloads are read-only; the slab scorer consumes them via fused
+        dequant).  Checksums are verified and stripped; ``outcomes``
+        collects per-key :class:`IOOutcome` records."""
+        out: List[Optional[Dict[str, np.ndarray]]] = []
+        for key in keys:
+            o = IOOutcome(key)
+            out.append(self._load_checked(key, o))
+            if outcomes is not None:
+                outcomes.append(o)
+        return out
 
     def delete(self, key: int):
         self._nbytes.pop(key, None)
@@ -166,8 +315,9 @@ class StorageBackend:
             if self.mode == "memory":
                 if key not in self._mem:
                     raise KeyError(key)
-                self._nbytes[key] = sum(a.nbytes
-                                        for a in self._mem[key].values())
+                self._nbytes[key] = sum(
+                    a.nbytes for name, a in self._mem[key].items()
+                    if name != _CHECKSUM_KEY)
             else:
                 self._nbytes[key] = self._disk_payload_nbytes(key)
         return self._nbytes[key]
@@ -182,6 +332,8 @@ class StorageBackend:
         total = 0
         with zipfile.ZipFile(path) as z:
             for name in z.namelist():
+                if name.split(".npy")[0] == _CHECKSUM_KEY:
+                    continue            # checksum member: metadata, not payload
                 with z.open(name) as f:
                     version = np.lib.format.read_magic(f)
                     read_header = getattr(

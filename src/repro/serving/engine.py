@@ -17,6 +17,7 @@ from typing import Any, Callable, List, Optional, Sequence
 import numpy as np
 
 from repro.core.costs import EdgeCostModel, LatencyBreakdown
+from repro.core.faults import DegradationPolicy
 from repro.data.tokenizer import HashingTokenizer
 
 
@@ -35,6 +36,12 @@ class RAGResponse:
     maintenance_s: float = 0.0       # deferred-maintenance edge seconds the
     #                                  batch drained after decode (amortized;
     #                                  off the TTFT critical path)
+    # failure model / degradation ladder (core/faults.py):
+    deadline_s: Optional[float] = None   # TTFT deadline this request carried
+    outcome: str = "ok"              # "ok" | "degraded" | "missed"
+    retries: int = 0                 # storage read attempts retried
+    degraded_clusters: int = 0       # probes / regens shed under deadline
+    stale_served: int = 0            # stale payloads scored, flagged
 
 
 class RAGEngine:
@@ -56,7 +63,9 @@ class RAGEngine:
 
     def answer_batch(self, queries: Sequence[str], query_embs: np.ndarray,
                      get_chunks: Callable[[Sequence[int]], List[str]],
-                     *, batcher=None, prefetch: bool = False
+                     *, batcher=None, prefetch: bool = False,
+                     deadlines: Optional[Sequence[Optional[float]]] = None,
+                     policy: Optional[DegradationPolicy] = None
                      ) -> List[RAGResponse]:
         """Batched serving path: one ``search_batch`` drives retrieval for
         the whole batch (cross-query cluster dedup + a single coalesced
@@ -72,6 +81,14 @@ class RAGEngine:
         query's effective retrieval time is ``max(io, compute)`` instead of
         their sum (``prefetch_saved_s`` reports the hidden seconds).
         Retrieved ids/contexts are identical either way.
+
+        ``deadlines``: per-request TTFT deadline budgets (edge seconds,
+        None entries = no deadline).  A fraction of each deadline
+        (``DegradationPolicy.prefill_reserve_frac``) is reserved for
+        prefill; the rest becomes the retrieval budget handed to
+        ``search_batch``, which sheds work down the degradation ladder
+        (core/faults.py) instead of blowing it.  Each response reports its
+        ``outcome`` ("ok" / "degraded" / "missed") plus the shed counters.
         """
         if not len(queries):
             return []
@@ -80,9 +97,23 @@ class RAGEngine:
         nq = len(queries)
         kw = {}
         prefetch = prefetch and hasattr(self.index, "plan_batch")
+        retrieval_deadlines = None
+        if deadlines is not None:
+            assert len(deadlines) == nq, \
+                f"{len(deadlines)} deadlines for {nq} queries"
+            policy = policy or DegradationPolicy()
+            retrieval_deadlines = [
+                None if d is None else d * (1.0 - policy.prefill_reserve_frac)
+                for d in deadlines]
+            kw["deadlines"] = retrieval_deadlines
+            kw["policy"] = policy
         if prefetch:
-            kw["plan"] = self.index.plan_batch(query_embs, self.nprobe,
-                                               prefetch_storage=True)
+            kw["plan"] = self.index.plan_batch(
+                query_embs, self.nprobe, prefetch_storage=True,
+                deadlines=retrieval_deadlines, policy=policy,
+                query_chars=[len(q) for q in queries])
+            kw.pop("deadlines", None)    # the plan carries them already
+            kw.pop("policy", None)
         ids, _, lats = self.index.search_batch(
             query_embs, self.k, self.nprobe,
             query_chars=[len(q) for q in queries], **kw)
@@ -130,28 +161,46 @@ class RAGEngine:
             if prefetch:
                 # storage I/O was issued at plan time: it runs under the
                 # rest of this query's retrieval work instead of before it
-                io = lats[qi].l2_storage_load_s
+                # (an injected stall is I/O-side, so it overlaps too)
+                io = lats[qi].l2_storage_load_s + lats[qi].l2_stall_s
                 saved = min(io, retrieval_edge - io)
+            ttft_edge = retrieval_edge - saved + prefill_edge
+            deadline = None if deadlines is None else deadlines[qi]
+            degraded = bool(lats[qi].degraded_clusters
+                            or lats[qi].stale_served)
+            outcome = "ok"
+            if deadline is not None and ttft_edge > deadline:
+                outcome = "missed"
+            elif degraded:
+                outcome = "degraded"
             responses.append(RAGResponse(
                 query=queries[qi], chunk_ids=id_lists[qi],
                 context=contexts[qi], output_tokens=out_tokens[qi],
                 retrieval=lats[qi], prefill_edge_s=prefill_edge,
-                ttft_edge_s=retrieval_edge - saved + prefill_edge,
+                ttft_edge_s=ttft_edge,
                 ttft_wall_s=retrieval_wall / nq,
                 decode_wall_s=decode_wall,
                 prefetch_saved_s=saved,
-                maintenance_s=maintenance_s / nq))
+                maintenance_s=maintenance_s / nq,
+                deadline_s=deadline, outcome=outcome,
+                retries=lats[qi].retries,
+                degraded_clusters=lats[qi].degraded_clusters,
+                stale_served=lats[qi].stale_served))
         return responses
 
     def answer(self, query: str, query_emb: np.ndarray,
                get_chunks: Callable[[Sequence[int]], List[str]],
-               *, prefetch: bool = False) -> RAGResponse:
+               *, prefetch: bool = False,
+               deadline_s: Optional[float] = None,
+               policy: Optional[DegradationPolicy] = None) -> RAGResponse:
         """Single query — a batch of one through :meth:`answer_batch`
         (mirroring ``EdgeRAGIndex.search`` → ``search_batch``)."""
         query_embs = np.atleast_2d(np.asarray(query_emb, np.float32))
         assert query_embs.shape[0] == 1
-        return self.answer_batch([query], query_embs, get_chunks,
-                                 prefetch=prefetch)[0]
+        return self.answer_batch(
+            [query], query_embs, get_chunks, prefetch=prefetch,
+            deadlines=None if deadline_s is None else [deadline_s],
+            policy=policy)[0]
 
 
 class GeneratorModel:

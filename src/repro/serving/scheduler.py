@@ -24,6 +24,11 @@ class Request:
     # filled on completion
     start_s: float = dataclasses.field(compare=False, default=0.0)
     finish_s: float = dataclasses.field(compare=False, default=0.0)
+    degraded: bool = dataclasses.field(compare=False, default=False)
+    # ^ served, but the degradation ladder shed work to make the deadline
+    failed: bool = dataclasses.field(compare=False, default=False)
+    # ^ serve_fn raised: the request produced no answer (run() keeps going)
+    error: str = dataclasses.field(compare=False, default="")
 
     @property
     def latency_s(self) -> float:
@@ -31,7 +36,18 @@ class Request:
 
     @property
     def slo_met(self) -> bool:
-        return self.latency_s <= self.slo_s
+        return not self.failed and self.latency_s <= self.slo_s
+
+    @property
+    def outcome(self) -> str:
+        """How the request ended: "met" (deadline met cleanly),
+        "degraded" (met, but only by shedding work), "missed" (served
+        past its deadline), "failed" (serve_fn raised)."""
+        if self.failed:
+            return "failed"
+        if self.latency_s > self.slo_s:
+            return "missed"
+        return "degraded" if self.degraded else "met"
 
 
 class RequestScheduler:
@@ -40,6 +56,7 @@ class RequestScheduler:
         self.completed: List[Request] = []
         self._next_rid = 0
         self.maintenance_s = 0.0     # total deferred-maintenance seconds
+        self.errors: List[str] = []  # serve_fn exceptions (failed requests)
 
     def submit(self, arrival_s: float, query: str = "", query_emb=None,
                query_chars: int = 0, slo_s: float = 1.0) -> Request:
@@ -58,6 +75,14 @@ class RequestScheduler:
         The device is serially occupied (edge device: one query at a time);
         queueing delay accrues when arrivals outpace service.
 
+        Each request carries its OWN deadline (``slo_s``, set at submit);
+        ``serve_fn`` may set ``req.degraded`` to flag that the degradation
+        ladder shed work for this request — its ``outcome`` then reports
+        "met" / "degraded" / "missed" / "failed" per request.  A
+        ``serve_fn`` that RAISES marks the request failed (error recorded
+        on the request and in ``self.errors``) and the loop keeps serving:
+        one bad request can no longer wedge the queue.
+
         ``maintenance_fn`` (deferred index maintenance, wrapping
         ``MaintenanceScheduler.drain``) models background work that YIELDS
         to foreground requests: it only runs when the device goes idle — no
@@ -74,7 +99,13 @@ class RequestScheduler:
             req = heapq.heappop(self._queue)
             clock = max(clock, req.arrival_s)
             req.start_s = clock
-            service_s = serve_fn(req)
+            try:
+                service_s = float(serve_fn(req))
+            except Exception as e:     # noqa: BLE001 — isolate the request
+                service_s = 0.0
+                req.failed = True
+                req.error = f"{type(e).__name__}: {e}"
+                self.errors.append(req.error)
             clock += service_s
             req.finish_s = clock
             self.completed.append(req)
@@ -91,3 +122,10 @@ class RequestScheduler:
         if not self.completed:
             return 1.0
         return sum(r.slo_met for r in self.completed) / len(self.completed)
+
+    def outcome_counts(self) -> dict:
+        """Per-outcome request counts: met / degraded / missed / failed."""
+        counts = {"met": 0, "degraded": 0, "missed": 0, "failed": 0}
+        for r in self.completed:
+            counts[r.outcome] += 1
+        return counts

@@ -161,9 +161,13 @@ def test_latency_accounting_consistency(stack, ds):
     parts = (d["embed_query_s"] + d["centroid_search_s"] + d["l2_generate_s"]
              + d["l2_storage_load_s"] + d["l2_dequant_s"]
              + d["l2_cache_hit_s"] + d["l2_mem_load_s"] + d["l2_search_s"]
-             + d["l2_slab_pack_s"] + d["l2_fused_dequant_s"])
+             + d["l2_slab_pack_s"] + d["l2_fused_dequant_s"]
+             + d["l2_stall_s"] + d["l2_retry_backoff_s"])
     assert abs(parts - d["retrieval_s"]) < 1e-12
     assert d["l2_slab_pack_s"] > 0          # slab engine packed this batch
+    # the fault-model fields stay zero on the fault-free path
+    assert d["l2_stall_s"] == 0 and d["l2_retry_backoff_s"] == 0
+    assert (lat.retries, lat.degraded_clusters, lat.stale_served) == (0, 0, 0)
     assert lat.n_clusters_probed == 5
     assert (lat.n_generated + lat.n_storage_loads + lat.n_cache_hits
             == lat.n_clusters_probed)

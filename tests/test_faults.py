@@ -1,0 +1,442 @@
+"""Fault-injection + graceful-degradation subsystem (core/faults.py):
+checksum verification, retry/backoff accounting, corrupt-blob quarantine,
+the deadline degradation ladder through resolver/engine, crash-safe disk
+puts, maintenance-op quarantine, and per-request scheduler outcomes."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (DegradationPolicy, EdgeCostModel, EdgeRAGIndex,
+                        FaultInjector)
+from repro.core.faults import InjectedMissing, TransientIOError
+from repro.core.storage import CODECS, StorageBackend, payload_checksum
+from repro.data import generate_dataset
+from repro.serving.scheduler import RequestScheduler
+
+pytestmark = pytest.mark.fast
+
+
+def _emb(n=40, d=64, seed=0):
+    rng = np.random.default_rng(seed)
+    e = rng.standard_normal((n, d)).astype(np.float32)
+    return e / np.linalg.norm(e, axis=1, keepdims=True)
+
+
+class NFaults(FaultInjector):
+    """Inject exactly ``n`` faults of one kind, then read clean — pins the
+    retry path deterministically."""
+
+    def __init__(self, n, kind, **kw):
+        super().__init__(fault_rate=1.0, kind_weights={kind: 1.0}, **kw)
+        self.remaining = n
+
+    def perturb(self, key, payload, outcome=None):
+        if self.remaining <= 0:
+            return payload
+        self.remaining -= 1
+        return super().perturb(key, payload, outcome)
+
+
+# ---------------------------------------------------------------------------
+# injector
+# ---------------------------------------------------------------------------
+def test_injector_deterministic_and_counted():
+    a = FaultInjector(seed=7, fault_rate=0.5, stall_rate=0.5)
+    b = FaultInjector(seed=7, fault_rate=0.5, stall_rate=0.5)
+    payload = {"emb": _emb(n=8)}
+    for inj in (a, b):
+        for key in range(50):
+            try:
+                inj.perturb(key, payload)
+            except (InjectedMissing, TransientIOError):
+                pass
+    assert a.injected == b.injected and a.injected_total > 0
+    assert a.stalls == b.stalls and a.stall_s_total == b.stall_s_total
+    assert a.injected_total == sum(a.injected.values())
+    # the stored payload is never damaged by flip/truncate injection
+    assert np.array_equal(payload["emb"], _emb(n=8))
+
+
+@pytest.mark.parametrize("kind", ["flip", "truncate"])
+def test_corruption_changes_checksum(kind):
+    inj = FaultInjector(seed=0, fault_rate=1.0, kind_weights={kind: 1.0})
+    payload = {"emb": _emb()}
+    bad = inj.perturb(0, payload)
+    assert payload_checksum(bad) != payload_checksum(payload)
+
+
+# ---------------------------------------------------------------------------
+# storage: verified, retried reads
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["memory", "disk"])
+@pytest.mark.parametrize("codec", CODECS)
+def test_checksum_verified_on_read(mode, codec, tmp_path):
+    root = str(tmp_path) if mode == "disk" else None
+    s = StorageBackend(mode, root=root, codec=codec)
+    s.put(1, _emb())
+    s.get(1)
+    assert s.io_stats["verified"] == 1
+    assert s.io_stats["failed_attempts"] == 0
+
+
+@pytest.mark.parametrize("kind", ["flip", "truncate", "missing", "io"])
+def test_one_injected_fault_recovers_via_retry(kind):
+    s = StorageBackend("memory")
+    emb = _emb()
+    s.put(1, emb)
+    s.faults = NFaults(1, kind)
+    assert np.array_equal(s.get(1), emb)    # retry read the clean copy
+    assert s.io_stats["retries"] == 1
+    assert s.io_stats["failed_attempts"] == 1
+    assert s.io_stats["backoff_s"] > 0
+    assert s.io_stats["exhausted"] == 0
+
+
+def test_corrupt_exhausted_quarantine_drops_blob():
+    s = StorageBackend("memory", retry_limit=2)
+    s.put(1, _emb())
+    s.faults = NFaults(10, "flip")
+    with pytest.raises(KeyError):
+        s.get(1)
+    assert s.io_stats["exhausted"] == 1
+    assert s.io_stats["corrupt_dropped"] == 1
+    assert 1 not in s       # dropped: the self-heal re-puts a fresh copy
+    assert s.io_stats["failed_attempts"] == 3     # 1 try + 2 retries
+
+
+def test_genuine_missing_never_retried():
+    s = StorageBackend("memory")
+    s.faults = FaultInjector(fault_rate=0.0)
+    with pytest.raises(KeyError):
+        s.get(42)
+    assert s.get_many([42]) == [None]
+    assert s.io_stats["retries"] == 0
+    assert s.io_stats["failed_attempts"] == 0
+
+
+def test_stall_charged_to_outcome():
+    s = StorageBackend("memory")
+    s.put(1, _emb())
+    s.faults = FaultInjector(seed=3, stall_rate=1.0, stall_scale_s=0.05)
+    outcomes = []
+    [payload] = s.get_many_raw([1], outcomes=outcomes)
+    assert payload is not None
+    assert outcomes[0].stall_s > 0
+    assert s.io_stats["stall_s"] == outcomes[0].stall_s
+    assert s.faults.stalls == 1
+
+
+def test_fault_accounting_identity():
+    """Every injected (non-stall) fault is a failed attempt, and every
+    failed attempt was either retried or ended an exhausted read."""
+    s = StorageBackend("memory", retry_limit=3)
+    for k in range(20):
+        s.put(k, _emb(n=6, seed=k))
+    s.faults = FaultInjector(seed=5, fault_rate=0.3, stall_rate=0.2)
+    s.get_many_raw(list(range(20)))
+    st = s.io_stats
+    assert s.faults.injected_total == st["failed_attempts"]
+    assert st["failed_attempts"] == st["retries"] + st["exhausted"]
+
+
+# ---------------------------------------------------------------------------
+# end to end: faults under search
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def ds():
+    return generate_dataset(n_records=700, dim=32, n_topics=24,
+                            n_queries=16, seed=11)
+
+
+def _fresh(ds, **kw):
+    er = EdgeRAGIndex(32, ds.embedder, ds.get_chunks, EdgeCostModel(),
+                      slo_s=0.05, **kw)   # tiny SLO: most clusters stored
+    er.build(ds.chunk_ids, ds.texts, nlist=24, embeddings=ds.embeddings,
+             seed=1)
+    return er
+
+
+def test_search_results_unchanged_under_total_corruption(ds):
+    """With EVERY storage read corrupt, retrieval degrades to regeneration
+    (checksum catch -> retry -> quarantine-drop -> regen + re-put) and
+    (ids, scores) stay identical to the fault-free index."""
+    ref = _fresh(ds)
+    er = _fresh(ds)
+    er.storage.faults = FaultInjector(seed=0, fault_rate=1.0,
+                                      kind_weights={"flip": 1.0})
+    r_ids, r_vals, _ = ref.search_batch(ds.query_embs, 10, 5)
+    ids, vals, lats = er.search_batch(ds.query_embs, 10, 5)
+    assert np.array_equal(ids, r_ids)
+    assert np.array_equal(vals, r_vals)
+    assert sum(l.n_storage_loads for l in lats) == 0
+    assert sum(l.retries for l in lats) > 0
+    assert sum(l.l2_retry_backoff_s for l in lats) > 0
+    assert er.storage.io_stats["corrupt_dropped"] > 0
+
+
+def test_search_results_unchanged_under_partial_faults(ds):
+    """10%-ish faults + stalls: identical results, stall seconds charged."""
+    ref = _fresh(ds)
+    er = _fresh(ds)
+    er.storage.faults = FaultInjector(seed=2, fault_rate=0.1,
+                                      stall_rate=0.3)
+    r_ids, r_vals, _ = ref.search_batch(ds.query_embs, 10, 5)
+    ids, vals, lats = er.search_batch(ds.query_embs, 10, 5)
+    assert np.array_equal(ids, r_ids)
+    assert np.array_equal(vals, r_vals)
+    if er.storage.faults.stalls:
+        assert sum(l.l2_stall_s for l in lats) > 0
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+def test_no_deadline_is_bit_identical(ds):
+    ref = _fresh(ds)
+    er = _fresh(ds)
+    r_ids, r_vals, r_lats = ref.search_batch(ds.query_embs, 10, 5)
+    ids, vals, lats = er.search_batch(ds.query_embs, 10, 5,
+                                      deadlines=[None] * len(ds.query_embs))
+    assert np.array_equal(ids, r_ids) and np.array_equal(vals, r_vals)
+    for lat, r_lat in zip(lats, r_lats):
+        assert lat.retrieval_s == r_lat.retrieval_s
+        assert (lat.retries, lat.degraded_clusters, lat.stale_served) \
+            == (0, 0, 0)
+
+
+def test_rung1_deadline_sheds_probes(ds):
+    """An impossibly tight deadline trims the probe list down to
+    ``min_nprobe`` and records the sheds."""
+    er = _fresh(ds, store_heavy=False, cache_bytes=0)   # everything regens
+    pol = DegradationPolicy(min_nprobe=2, shed_regen=False,
+                            serve_stale=False)
+    ids, _, lat = er.search(ds.query_embs[0], 10, 6, deadline_s=1e-9,
+                            policy=pol)
+    assert lat.n_clusters_probed == 2           # trimmed, never below floor
+    assert lat.degraded_clusters == 6 - 2
+    assert (ids >= 0).any()                     # still serves an answer
+
+
+def test_rung2_deadline_sheds_largest_regens(ds):
+    """With probe-trimming off, an unaffordable regen queue sheds its most
+    expensive clusters (zero rows) instead of blowing the deadline."""
+    er = _fresh(ds, store_heavy=False, cache_bytes=0)
+    pol = DegradationPolicy(shed_probes=False, serve_stale=False)
+    ref = _fresh(ds, store_heavy=False, cache_bytes=0)
+    _, _, r_lat = ref.search(ds.query_embs[0], 10, 6)
+    # afford about half the regeneration bill: the largest regens shed,
+    # the cheap head still serves
+    ids, _, lat = er.search(ds.query_embs[0], 10, 6,
+                            deadline_s=0.5 * r_lat.l2_generate_s,
+                            policy=pol)
+    assert lat.n_clusters_probed == 6           # rung 1 disabled
+    assert lat.degraded_clusters > 0            # regens shed
+    assert lat.l2_generate_s < r_lat.l2_generate_s
+    assert (ids >= 0).any()
+
+
+def test_rung3_serves_stale_cache_flagged(ds):
+    """A cached payload invalidated by a same-size mutation between plan
+    and execute is scored anyway (flagged) when the deadline cannot afford
+    regeneration."""
+    er = _fresh(ds, store_heavy=False)
+    er.search_batch(ds.query_embs[:4], 10, 5)   # warm the cache
+    pol = DegradationPolicy(shed_probes=False, shed_regen=False,
+                            serve_stale=True)
+    plan = er.plan_batch(ds.query_embs[:4], 5, deadlines=[1e-9] * 4,
+                         policy=pol)
+    assert plan.cached
+    for cid in plan.cached:                      # same-size mutation
+        er.clusters[cid].generation += 1
+    ids, _, lats = er.search_batch(ds.query_embs[:4], 10, 5, plan=plan)
+    assert sum(l.stale_served for l in lats) == len(plan.cached)
+    assert (ids >= 0).any()
+    for cid in plan.cached:                      # one-shot: evicted after
+        assert cid not in er.cache
+
+
+def test_degraded_recall_still_overlaps_fault_free(ds):
+    """Rung-2 shedding keeps the cheap head of the probe list, so top-10
+    ids still largely overlap the fault-free answer."""
+    ref = _fresh(ds)
+    er = _fresh(ds, store_heavy=False, cache_bytes=0)
+    pol = DegradationPolicy(shed_probes=False, serve_stale=False)
+    r_ids, _, _ = ref.search_batch(ds.query_embs, 10, 5)
+    ids, _, lats = er.search_batch(
+        ds.query_embs, 10, 5, deadlines=[0.6] * len(ds.query_embs),
+        policy=pol)
+    assert sum(l.degraded_clusters for l in lats) > 0
+    overlap = np.mean([len(set(a[a >= 0]) & set(b[b >= 0])) / 10.0
+                       for a, b in zip(ids, r_ids)])
+    assert overlap > 0.5
+
+
+# ---------------------------------------------------------------------------
+# in-place updates: the same-size staleness rung 3 exists for
+# ---------------------------------------------------------------------------
+def _update_stack():
+    """Local dataset (updates mutate the chunk store permanently — the
+    module fixture must stay pristine) + a deferred-maintenance index."""
+    ds2 = generate_dataset(n_records=300, dim=32, n_topics=12, n_queries=8,
+                           seed=21)
+    er = EdgeRAGIndex(32, ds2.embedder, ds2.get_chunks, EdgeCostModel(),
+                      slo_s=0.05, maintenance="deferred")
+    er.build(ds2.chunk_ids, ds2.texts, nlist=16, embeddings=ds2.embeddings,
+             seed=1)
+    cid, cl = next((i, c) for i, c in enumerate(er.clusters)
+                   if c.stored and c.size >= 2)
+    chunk = int(cl.ids[0])
+    rng = np.random.default_rng(5)
+    emb = ds2.embedder.table[chunk] + 0.05 * rng.standard_normal(32)
+    emb = (emb / np.linalg.norm(emb)).astype(np.float32)
+    text = f"doc-{chunk} revised " + "tok " * 8
+    ds2.add_chunk(chunk, text, emb)          # same id: in-place overwrite
+    return ds2, er, cid, chunk, emb, text
+
+
+def test_update_in_place_marks_stale_then_self_heals():
+    """update(): same rows, bumped generation -> the stored copy goes
+    stale; a deadline-free search regenerates EXACTLY (new embedding
+    served) and Alg. 1 self-heal refreshes the copy."""
+    ds2, er, cid, chunk, emb, text = _update_stack()
+    cl = er.clusters[cid]
+    rows = cl.size
+    assert er.update(chunk, text) == cid
+    assert cl.size == rows                       # row-aligned mutation
+    assert cid in er.storage and not cl.storage_fresh
+    ids, _, lat = er.search(emb, 5, 4)
+    assert chunk in ids[0].tolist()              # fresh embedding served
+    assert lat.n_generated >= 1                  # stale copy bypassed
+    assert cl.storage_fresh                      # regen + re-put healed it
+
+
+def test_update_stale_stored_copy_served_under_deadline():
+    """When the deadline cannot afford regenerating an updated cluster,
+    the ladder serves its row-aligned stale STORED copy, flagged."""
+    ds2, er, cid, chunk, emb, text = _update_stack()
+    er.update(chunk, text)
+    pol = DegradationPolicy(shed_probes=False)
+    ids, _, lat = er.search(emb, 5, 4, deadline_s=1e-9, policy=pol)
+    assert lat.stale_served == 1                 # old copy scored, flagged
+    assert lat.degraded_clusters == 0            # nothing zero-rowed
+    assert (ids >= 0).any()
+    assert not er.clusters[cid].storage_fresh    # copy left stale
+
+
+def test_update_unknown_chunk_is_noop():
+    ds2, er, *_ = _update_stack()
+    gens = [c.generation for c in er.clusters]
+    assert er.update(10**9, "doc-x") is None
+    assert [c.generation for c in er.clusters] == gens
+
+
+# ---------------------------------------------------------------------------
+# crash-safe disk put
+# ---------------------------------------------------------------------------
+def test_put_is_atomic_under_crash(tmp_path, monkeypatch):
+    s = StorageBackend("disk", root=str(tmp_path))
+    emb = _emb()
+    s.put(1, emb)
+
+    def boom(src, dst):
+        raise OSError("simulated crash mid-replace")
+
+    monkeypatch.setattr(os, "replace", boom)
+    with pytest.raises(OSError):
+        s.put(1, _emb(seed=9))
+    monkeypatch.undo()
+    # the old payload survives intact and no temp file is left behind
+    assert np.array_equal(s.get(1), emb)
+    assert not any(f.endswith(".tmp") for f in os.listdir(str(tmp_path)))
+
+
+# ---------------------------------------------------------------------------
+# maintenance quarantine
+# ---------------------------------------------------------------------------
+def test_drain_quarantines_poison_op(ds, monkeypatch):
+    er = _fresh(ds, maintenance="deferred")
+    sched = er.maintenance
+    # vanished storage copies make the queued restores genuinely runnable
+    # (otherwise drain-time revalidation skips them as already satisfied)
+    er.storage.delete(0)
+    er.storage.delete(2)
+    sched.enqueue("restore", 0)
+    sched.enqueue("restore", 2)
+    real = er._restore_cluster
+
+    def boom(cid):
+        if cid == 0:
+            raise RuntimeError("poison restore")
+        return real(cid)
+
+    monkeypatch.setattr(er, "_restore_cluster", boom)
+    for _ in range(sched.max_op_failures):
+        report = sched.drain()
+        assert ("restore", 0) in report.failed
+    # the poison op is quarantined; the queue kept draining around it
+    assert ("restore", 0) in sched.quarantined
+    assert ("restore", 0) not in [(op.kind, op.cid) for op in sched.pending]
+    assert sched.stats()["quarantined"] == 1
+    assert sched.n_failures == sched.max_op_failures
+    # a fresh enqueue lifts the quarantine and the healed op runs
+    monkeypatch.undo()
+    sched.enqueue("restore", 0)
+    assert ("restore", 0) not in sched.quarantined
+    report = sched.drain()
+    assert not report.failed
+
+
+def test_drain_keeps_draining_around_failures(ds, monkeypatch):
+    """Ops behind a failing one still run in the same drain."""
+    er = _fresh(ds, maintenance="deferred")
+    sched = er.maintenance
+    er.storage.delete(0)
+    er.storage.delete(2)
+    sched.enqueue("restore", 0)
+    sched.enqueue("restore", 2)
+    calls = []
+    real = er._restore_cluster
+
+    def flaky(cid):
+        calls.append(cid)
+        if cid == 0:
+            raise RuntimeError("poison")
+        return real(cid)
+
+    monkeypatch.setattr(er, "_restore_cluster", flaky)
+    report = sched.drain()
+    assert ("restore", 0) in report.failed
+    assert 2 in calls                      # the later op still ran
+
+
+# ---------------------------------------------------------------------------
+# scheduler outcomes
+# ---------------------------------------------------------------------------
+def test_scheduler_per_request_outcomes():
+    rs = RequestScheduler()
+    # spaced arrivals: no queueing delay muddies the per-request outcomes
+    rs.submit(0.0, query="a", slo_s=1.0)         # met cleanly
+    rs.submit(1.0, query="b", slo_s=0.05)        # degraded (flagged)
+    rs.submit(2.0, query="c", slo_s=0.01)        # missed
+    rs.submit(3.0, query="d", slo_s=1.0)         # failed (raises)
+
+    def serve(req):
+        if req.query == "d":
+            raise RuntimeError("backend exploded")
+        if req.query == "b":
+            req.degraded = True
+            return 0.04
+        return 0.02 if req.query == "a" else 0.05
+
+    done = rs.run(serve)
+    assert len(done) == 4                        # the raise didn't wedge it
+    by_q = {r.query: r for r in done}
+    assert by_q["a"].outcome == "met"
+    assert by_q["b"].outcome == "degraded" and by_q["b"].slo_met
+    assert by_q["c"].outcome == "missed"
+    assert by_q["d"].outcome == "failed" and not by_q["d"].slo_met
+    assert "backend exploded" in by_q["d"].error
+    assert rs.outcome_counts() == {"met": 1, "degraded": 1, "missed": 1,
+                                   "failed": 1}
+    assert len(rs.errors) == 1
