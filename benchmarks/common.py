@@ -1,8 +1,12 @@
-"""Shared benchmark helpers: CSV emission + timing."""
+"""Shared benchmark helpers: CSV emission, timing, and the seeded
+churn-stream / arrival-trace generators used by the serving benchmarks
+(online_churn, fault_tolerance, pipeline_throughput)."""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, List, Tuple
+
+import numpy as np
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
@@ -18,3 +22,77 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
     for _ in range(iters):
         fn(*args)
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def build_churn_ops(ds, rng, dim: int, *, n_insert: int, n_remove: int,
+                    n_query: int, n_update: int = 0,
+                    insert_noise: float = 0.05, update_noise: float = 0.02,
+                    first_new_id: int = 1_000_000) -> List[Tuple]:
+    """One seeded mixed query / churn op stream, shared by the serving
+    benchmarks.  Op kinds are counted out, shuffled, then materialized in
+    shuffled order: inserts synthesize a near-duplicate of a random corpus
+    chunk (plus ``insert_noise``), updates re-embed a random LIVE chunk in
+    place (same id, ``update_noise``), removes pick a random live chunk,
+    queries pick a random query index.  Inserts and updates register their
+    text/embedding on ``ds`` up front so calibration and every arm replay
+    the IDENTICAL stream.
+
+    Returns op payloads without timestamps (pair with
+    :func:`bursty_arrival_times`): ``("insert", id, text)``,
+    ``("update", id, text)``, ``("remove", id)``, ``("query", qi)``.
+    """
+    live = [int(i) for i in ds.chunk_ids]
+    next_id = first_new_id
+    kinds = (["insert"] * n_insert + ["remove"] * n_remove
+             + ["update"] * n_update + ["query"] * n_query)
+    rng.shuffle(kinds)
+    ops: List[Tuple] = []
+    for kind in kinds:
+        if kind == "insert":
+            src = int(rng.integers(ds.n))
+            emb = (ds.embeddings[src]
+                   + insert_noise * rng.standard_normal(dim))
+            emb = (emb / np.linalg.norm(emb)).astype(np.float32)
+            text = f"doc-{next_id} " + "tok " * int(rng.integers(3, 60))
+            ds.add_chunk(next_id, text, emb)
+            ops.append(("insert", next_id, text))
+            live.append(next_id)
+            next_id += 1
+        elif kind == "remove" and live:
+            ops.append(("remove", live.pop(int(rng.integers(len(live))))))
+        elif kind == "update" and live:
+            cid = live[int(rng.integers(len(live)))]
+            emb = (ds.embedder.table[cid]
+                   + update_noise * rng.standard_normal(dim))
+            emb = (emb / np.linalg.norm(emb)).astype(np.float32)
+            text = f"doc-{cid} rev " + "tok " * int(rng.integers(3, 60))
+            ds.add_chunk(cid, text, emb)        # same id: in-place
+            ops.append(("update", cid, text))
+        else:
+            ops.append(("query", int(rng.integers(len(ds.query_embs)))))
+    return ops
+
+
+def bursty_arrival_times(rng, n: int, gap_mean_s: float, *,
+                         burst: int = 1,
+                         burst_gap_frac: float = 0.1) -> List[float]:
+    """``n`` arrival timestamps at mean rate ``1/gap_mean_s``.
+
+    ``burst=1``: plain exponential (Poisson) arrivals.  ``burst>1``: the
+    conversational edge pattern — ``burst`` back-to-back ops separated by
+    ``burst_gap_frac * gap_mean_s``, then a lull sized so the MEAN rate is
+    unchanged (maintenance drains in the lulls, queries queue in the
+    bursts)."""
+    if burst <= 1:
+        times, t = [], 0.0
+        for _ in range(n):
+            t += float(rng.exponential(gap_mean_s))
+            times.append(t)
+        return times
+    intra_s = burst_gap_frac * gap_mean_s
+    lull_s = burst * gap_mean_s - (burst - 1) * intra_s
+    times, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(lull_s if i % burst == 0 else intra_s))
+        times.append(t)
+    return times

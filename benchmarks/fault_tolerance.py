@@ -40,7 +40,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import build_churn_ops, bursty_arrival_times, emit
 from repro.core import (DegradationPolicy, EdgeCostModel, EdgeRAGIndex,
                         FaultInjector)
 from repro.data import generate_dataset
@@ -73,41 +73,15 @@ ARMS: Dict[str, Dict] = {
 
 
 def build_ops(ds, rng, churn_frac: float) -> List[Tuple]:
-    """Op stream (~70% queries, ~30% churn split insert / remove / update);
-    inserts and updates register on ``ds`` up front so every arm replays
-    the identical stream.  Updates are in-place re-embeds (same id, same
-    cluster rows) — the same-size staleness the ladder's stale-serving
-    rung covers."""
+    """Op stream (~70% queries, ~30% churn split insert / remove / update)
+    via the shared seeded generator (benchmarks/common.py); inserts and
+    updates register on ``ds`` up front so every arm replays the identical
+    stream.  Updates are in-place re-embeds (same id, same cluster rows) —
+    the same-size staleness the ladder's stale-serving rung covers."""
     n_ins = n_rem = n_upd = int(churn_frac * ds.n / 3)
     n_query = int((n_ins + n_rem + n_upd) * 7 / 3)
-    live = [int(i) for i in ds.chunk_ids]
-    next_id = 1_000_000
-    kinds = (["insert"] * n_ins + ["remove"] * n_rem + ["update"] * n_upd
-             + ["query"] * n_query)
-    rng.shuffle(kinds)
-    ops = []
-    for kind in kinds:
-        if kind == "insert":
-            src = int(rng.integers(ds.n))
-            emb = ds.embeddings[src] + 0.05 * rng.standard_normal(DIM)
-            emb = (emb / np.linalg.norm(emb)).astype(np.float32)
-            text = f"doc-{next_id} " + "tok " * int(rng.integers(3, 60))
-            ds.add_chunk(next_id, text, emb)
-            ops.append(("insert", next_id, text))
-            live.append(next_id)
-            next_id += 1
-        elif kind == "remove" and live:
-            ops.append(("remove", live.pop(int(rng.integers(len(live))))))
-        elif kind == "update" and live:
-            cid = live[int(rng.integers(len(live)))]
-            emb = ds.embedder.table[cid] + 0.02 * rng.standard_normal(DIM)
-            emb = (emb / np.linalg.norm(emb)).astype(np.float32)
-            text = f"doc-{cid} rev " + "tok " * int(rng.integers(3, 60))
-            ds.add_chunk(cid, text, emb)        # same id: in-place
-            ops.append(("update", cid, text))
-        else:
-            ops.append(("query", int(rng.integers(len(ds.query_embs)))))
-    return ops
+    return build_churn_ops(ds, rng, DIM, n_insert=n_ins, n_remove=n_rem,
+                           n_update=n_upd, n_query=n_query)
 
 
 def _fresh_index(ds, cost, *, nlist: int, slo_s: float) -> EdgeRAGIndex:
@@ -170,10 +144,13 @@ def run_arm(ds, stream, cost, injector_kw: Dict, deadline_s: float,
     faulty = injector.fault_rate > 0 or injector.stall_rate > 0
     er.storage.faults = injector if faulty else None
     # maintenance (restore/split/merge after churn) runs ONLY in idle gaps
-    # (scheduler maintenance_fn); under backlog, staleness accumulates and
-    # queries pay regeneration — the deadline pressure the ladder sheds
+    # (scheduler maintenance_fn): drain ownership is EXTERNAL, so the
+    # engine never drains after decode — under backlog, staleness
+    # accumulates and queries pay regeneration, the deadline pressure the
+    # ladder sheds.  (The old maintenance_budget_s=0.0 still executed one
+    # op per answer — a double drain alongside the scheduler hook.)
     eng = RAGEngine(er, None, cost_model=cost, k=K, nprobe=NPROBE,
-                    maintenance_budget_s=0.0)
+                    maintenance_owner="external")
     sched = RequestScheduler()
     op_of = {}
     for t, op in stream:
@@ -263,10 +240,7 @@ def run(out_path: str = DEFAULT_OUT, quick: bool = False) -> Dict:
     # so the remainder handed to retrieval is an honest budget
     policy = DegradationPolicy(
         prefill_reserve_frac=min(0.9, prefill_frac))
-    times, t = [], 0.0
-    for _ in range(len(ops)):
-        t += float(rng.exponential(gap_mean_s))
-        times.append(t)
+    times = bursty_arrival_times(rng, len(ops), gap_mean_s)
     stream = list(zip(times, ops))
     emit("fault_tolerance.calibration", gap_mean_s * 1e6,
          f"gap={gap_mean_s*1e3:.1f}ms deadline={deadline_s*1e3:.1f}ms "

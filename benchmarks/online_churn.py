@@ -44,7 +44,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import build_churn_ops, bursty_arrival_times, emit
 from repro.core import EdgeCostModel, EdgeRAGIndex
 from repro.data import generate_dataset
 from repro.serving.scheduler import RequestScheduler
@@ -64,31 +64,12 @@ BURST_GAP_FRAC = 0.1        # intra-burst gap as a fraction of the mean gap
 
 
 def build_ops(ds, rng, churn_frac: float) -> List[Tuple]:
-    """Op payloads (no timestamps yet); inserts are registered on ``ds`` up
-    front so calibration and both arms replay the identical stream."""
+    """Op payloads (no timestamps yet) via the shared seeded generator
+    (benchmarks/common.py); inserts are registered on ``ds`` up front so
+    calibration and both arms replay the identical stream."""
     n_ins = n_rem = int(churn_frac * ds.n / 2)
-    live = [int(i) for i in ds.chunk_ids]
-    next_id = 1_000_000
-    kinds = (["insert"] * n_ins + ["remove"] * n_rem
-             + ["query"] * (n_ins + n_rem))
-    rng.shuffle(kinds)
-    ops = []
-    for kind in kinds:
-        if kind == "insert":
-            src = int(rng.integers(ds.n))
-            emb = (ds.embeddings[src]
-                   + 0.05 * rng.standard_normal(DIM))
-            emb = (emb / np.linalg.norm(emb)).astype(np.float32)
-            text = f"doc-{next_id} " + "tok " * int(rng.integers(3, 60))
-            ds.add_chunk(next_id, text, emb)
-            ops.append(("insert", next_id, text))
-            live.append(next_id)
-            next_id += 1
-        elif kind == "remove" and live:
-            ops.append(("remove", live.pop(int(rng.integers(len(live))))))
-        else:
-            ops.append(("query", int(rng.integers(len(ds.query_embs)))))
-    return ops
+    return build_churn_ops(ds, rng, DIM, n_insert=n_ins, n_remove=n_rem,
+                           n_query=n_ins + n_rem)
 
 
 def _fresh_index(ds, cost, *, nlist: int, slo_s: float,
@@ -202,12 +183,8 @@ def run(out_path: str = DEFAULT_OUT, quick: bool = False) -> Dict:
     # lull — the conversational edge pattern.  Sync maintenance lands
     # inside bursts (queries queue behind it); deferred maintenance drains
     # in the lulls.
-    intra_s = BURST_GAP_FRAC * gap_mean_s
-    lull_s = BURST * gap_mean_s - (BURST - 1) * intra_s
-    times, t = [], 0.0
-    for i in range(len(ops)):
-        t += float(rng.exponential(lull_s if i % BURST == 0 else intra_s))
-        times.append(t)
+    times = bursty_arrival_times(rng, len(ops), gap_mean_s, burst=BURST,
+                                 burst_gap_frac=BURST_GAP_FRAC)
     stream = list(zip(times, ops))
     emit("online_churn.calibration", gap_mean_s * 1e6,
          f"gap={gap_mean_s*1e3:.1f}ms target_util={TARGET_UTILIZATION}")

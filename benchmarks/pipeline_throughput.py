@@ -1,0 +1,238 @@
+"""Pipeline-throughput benchmark: staged serving vs the sequential loop.
+
+The same closed-loop query workload (batches of ``BATCH`` queries, all
+available at t=0 — steady-state throughput, not open-loop tails) is served
+twice against indexes built and churned identically:
+
+  sequential  the status-quo loop: each batch runs S1→S4 back-to-back and
+              then drains the deferred-maintenance queue to quiescence
+              (engine-owned drain) before the next batch starts — retrieval,
+              decode, and maintenance all serialize on the modeled clock
+  pipelined   :class:`~repro.serving.pipeline.StagedPipeline`: batch N+1's
+              probe / fetch / score run while batch N decodes, and the
+              maintenance queue drains inside residual S2/S3 bubbles
+              (strict budgets), with one final drain after the last decode
+
+Before serving, an update-only churn pass (shared seeded generator,
+``benchmarks/common.py``) re-embeds a fraction of the corpus in place:
+same ids, same cluster membership — so both arms probe IDENTICAL cluster
+sets — while staling every touched cluster's stored copy and seeding the
+maintenance queue with the restore / drop work the pipelined arm must hide
+in bubbles.  Update-only churn is what keeps the cross-arm bit-identicality
+claim testable: insert/remove churn would let maintenance timing change
+membership and thus probe sets.
+
+Retrieval work is regeneration-dominated (``cache_bytes=0``, most clusters
+under the storage SLO): per-batch retrieval is a stable fraction of decode
+time, the regime where pipelining pays (RAGDoll, arXiv 2504.15302).
+
+Reported: modeled makespan + QPS per arm, the pipelined arm's full
+:class:`PipelineTrace` (per-stage busy seconds, queue depths, maintenance
+in bubbles, replans, hidden-retrieval fraction), per-arm recall@K, and a
+per-query chunk-id comparison.  Acceptance (full scale): retrieval >= 90%
+hidden under decode, pipelined QPS >= 1.5x sequential, chunk ids
+bit-identical across arms.  At ``--quick`` scale fewer batches amortize
+the pipeline ramp so the smoke criterion is only "pipelined not slower".
+
+``python -m benchmarks.pipeline_throughput [--out PATH] [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import build_churn_ops, emit
+from repro.core import EdgeCostModel, EdgeRAGIndex
+from repro.data import generate_dataset
+from repro.serving.engine import RAGEngine
+from repro.serving.pipeline import PipelineBatch, StagedPipeline
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_pipeline.json")
+
+DIM = 48
+K = 2                    # short contexts: decode must not dwarf retrieval
+NPROBE = 10
+MAX_NEW_TOKENS = 24
+BATCH = 8
+UPDATE_FRAC = 0.4        # corpus fraction re-embedded in place before serving
+
+
+def _query_text(ds, qi: int) -> str:
+    return "q" * int(ds.query_chars[qi])
+
+
+def _build_index(ds, cost, *, nlist: int, slo_s: float) -> EdgeRAGIndex:
+    er = EdgeRAGIndex(DIM, ds.embedder, ds.get_chunks, cost, slo_s=slo_s,
+                      cache_bytes=0, merge_min_size=2,
+                      maintenance="deferred")
+    er.build(ds.chunk_ids, ds.texts, nlist=nlist, embeddings=ds.embeddings,
+             seed=1)
+    return er
+
+
+def _apply_churn(er, ops, cost) -> float:
+    """Replay the update-only churn against a fresh index; returns its
+    modeled edge seconds (identical both arms — charged before serving)."""
+    total = 0.0
+    for op in ops:
+        assert op[0] == "update", "pipeline bench churn must be update-only"
+        er.update(op[1], op[2])
+        total += cost.embed_latency(len(op[2]))
+    return total
+
+
+def _batches(ds, n_batches: int) -> List[Tuple[List[str], np.ndarray]]:
+    nq = len(ds.query_embs)
+    out = []
+    for b in range(n_batches):
+        idx = [(b * BATCH + i) % nq for i in range(BATCH)]
+        out.append(([_query_text(ds, qi) for qi in idx],
+                    np.stack([ds.query_embs[qi] for qi in idx])))
+    return out
+
+
+def run_sequential(ds, ops, cost, batches, **index_kw) -> Dict:
+    er = _build_index(ds, cost, **index_kw)
+    _apply_churn(er, ops, cost)
+    eng = RAGEngine(er, None, cost_model=cost, k=K, nprobe=NPROBE,
+                    max_new_tokens=MAX_NEW_TOKENS,
+                    maintenance_owner="engine")
+    clock = 0.0
+    maintenance_s = 0.0
+    retrieval_s = 0.0
+    decode_s = 0.0
+    ids: List[List[int]] = []
+    for queries, embs in batches:
+        job = eng.make_job(queries, embs, ds.get_chunks)
+        eng.stage_plan(job)
+        eng.stage_fetch(job)
+        eng.stage_score(job)
+        eng.stage_decode(job)
+        drain = (er.maintenance.drain(None).edge_s
+                 if len(er.maintenance) else 0.0)
+        retr = sum(job.stage_edge_s[s] for s in ("s1", "s2", "s3"))
+        retrieval_s += retr
+        decode_s += job.stage_edge_s["s4"]
+        maintenance_s += drain
+        clock += retr + job.stage_edge_s["s4"] + drain
+        ids.extend(r.chunk_ids for r in eng.finalize(job))
+    n_queries = sum(len(q) for q, _ in batches)
+    return {"makespan_s": clock, "qps": n_queries / clock,
+            "retrieval_s": retrieval_s, "decode_s": decode_s,
+            "maintenance_s": maintenance_s, "ids": ids}
+
+
+def run_pipelined(ds, ops, cost, batches, **index_kw) -> Dict:
+    er = _build_index(ds, cost, **index_kw)
+    _apply_churn(er, ops, cost)
+    eng = RAGEngine(er, None, cost_model=cost, k=K, nprobe=NPROBE,
+                    max_new_tokens=MAX_NEW_TOKENS,
+                    maintenance_owner="external")   # the pipeline drains
+    pipe = StagedPipeline(eng, ds.get_chunks)
+    responses, trace = pipe.run(
+        [PipelineBatch(queries=q, query_embs=e) for q, e in batches])
+    ids = [r.chunk_ids for batch in responses for r in batch]
+    # the final drain delays no response, but the work is real — charge it
+    # to the makespan so the throughput comparison is honest
+    total = trace.makespan_s + trace.final_drain_s
+    return {"makespan_s": trace.makespan_s,
+            "final_drain_s": trace.final_drain_s,
+            "qps": trace.n_queries / total,
+            "trace": trace.as_dict(), "ids": ids}
+
+
+def recall_at_k(ds, batches, ids: List[List[int]]) -> float:
+    nq = len(ds.query_embs)
+    hits, total = 0, 0
+    qi_seq = [(b * BATCH + i) % nq
+              for b in range(len(batches)) for i in range(BATCH)]
+    for qi, got in zip(qi_seq, ids):
+        hits += len(set(got) & ds.relevant(qi))
+        total += K
+    return hits / total
+
+
+def run(out_path: str = DEFAULT_OUT, quick: bool = False) -> Dict:
+    n_records = 600 if quick else 1400
+    nq = 32 if quick else 64
+    n_batches = 8 if quick else 16
+    nlist = max(16, n_records // 30)
+    ds = generate_dataset(n_records=n_records, dim=DIM,
+                          n_topics=max(12, n_records // 60),
+                          n_queries=nq, seed=17)
+    cost = EdgeCostModel()
+    # most clusters regenerate (the EdgeRAG fast path); the heavy tail is
+    # stored so update churn seeds restore work for the bubbles
+    mean_cluster_chars = sum(len(t) for t in ds.texts) / nlist
+    slo_s = cost.embed_latency(int(1.15 * mean_cluster_chars))
+    index_kw = dict(nlist=nlist, slo_s=slo_s)
+    rng = np.random.default_rng(23)
+    ops = build_churn_ops(ds, rng, DIM, n_insert=0, n_remove=0,
+                          n_update=int(UPDATE_FRAC * ds.n), n_query=0)
+    batches = _batches(ds, n_batches)
+
+    seq = run_sequential(ds, ops, cost, batches, **index_kw)
+    pipe = run_pipelined(ds, ops, cost, batches, **index_kw)
+    ids_identical = seq["ids"] == pipe["ids"]
+    recall = recall_at_k(ds, batches, pipe["ids"])
+    seq_ids = seq.pop("ids")
+    recall_seq = recall_at_k(ds, batches, seq_ids)
+    pipe.pop("ids")
+    qps_ratio = pipe["qps"] / seq["qps"]
+    hidden = pipe["trace"]["hidden_retrieval_fraction"]
+
+    emit("pipeline.sequential", seq["makespan_s"] * 1e6,
+         f"qps={seq['qps']:.3f} maint={seq['maintenance_s']:.2f}s")
+    emit("pipeline.pipelined", pipe["makespan_s"] * 1e6,
+         f"qps={pipe['qps']:.3f} hidden={hidden:.3f} "
+         f"bubbles_maint={pipe['trace']['maintenance_in_bubbles_s']:.2f}s "
+         f"replans={pipe['trace']['replans']}")
+    emit("pipeline.speedup", qps_ratio * 1e6,
+         f"qps_ratio={qps_ratio:.2f} ids_identical={ids_identical}")
+
+    results = {
+        "n_records": n_records, "n_queries_corpus": nq, "nlist": nlist,
+        "dim": DIM, "k": K, "nprobe": NPROBE, "slo_s": slo_s,
+        "batch": BATCH, "n_batches": n_batches,
+        "max_new_tokens": MAX_NEW_TOKENS,
+        "update_frac": UPDATE_FRAC, "n_updates": len(ops),
+        "sequential": seq,
+        "pipelined": pipe,
+        "qps_ratio": qps_ratio,
+        "hidden_retrieval_fraction": hidden,
+        "ids_identical": ids_identical,
+        "recall_at_k": {"pipelined": recall, "sequential": recall_seq},
+        "criteria": {
+            # full-scale targets; --quick runs fewer batches, so the CI
+            # smoke lane only enforces pipelined_not_slower + ids
+            "retrieval_hidden_90": hidden >= 0.90,
+            "qps_ratio_1_5": qps_ratio >= 1.5,
+            "ids_identical": ids_identical,
+            "pipelined_not_slower": qps_ratio >= 1.0,
+            "steady_state_batch_8": BATCH >= 8,
+        },
+    }
+    ok = all(results["criteria"].values())
+    print(f"# retrieval >= 90% hidden, qps >= 1.5x sequential, ids "
+          f"bit-identical: {'PASS' if ok else 'FAIL'}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {out_path}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(args.out, args.quick)
+
+
+if __name__ == "__main__":
+    main()

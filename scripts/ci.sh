@@ -5,11 +5,14 @@
 # (so the perf plumbing can't silently rot); pass chaos-smoke for a
 # quick-scale fault-injection run (storage faults + stalls + deadlines)
 # that fails on any unhandled exception, unaccounted fault, or recall
-# loss at the 10%-fault arm.
-#   scripts/ci.sh              -> pytest -m "not slow"
-#   scripts/ci.sh --full       -> full suite
-#   scripts/ci.sh bench-smoke  -> quick benchmarks + BENCH_*.json key check
-#   scripts/ci.sh chaos-smoke  -> quick fault-tolerance bench + schema check
+# loss at the 10%-fault arm; pass pipeline-smoke for a quick-scale staged
+# pipeline run that fails if pipelined throughput drops below sequential
+# or pipelined answers drift from the sequential path.
+#   scripts/ci.sh                 -> pytest -m "not slow"
+#   scripts/ci.sh --full          -> full suite
+#   scripts/ci.sh bench-smoke     -> quick benchmarks + BENCH_*.json key check
+#   scripts/ci.sh chaos-smoke     -> quick fault-tolerance bench + schema check
+#   scripts/ci.sh pipeline-smoke  -> quick pipeline-throughput bench + checks
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -135,10 +138,53 @@ assert ratio >= 0.99, \
     f"recall under 10% faults fell to {ratio:.3f}x of fault-free"
 print("chaos-smoke OK: faults absorbed, accounted, recall preserved")
 PY
+elif [[ "${1:-}" == "pipeline-smoke" ]]; then
+    out="$(mktemp -d)"
+    trap 'rm -rf "$out"' EXIT
+    python -m benchmarks.pipeline_throughput --quick \
+        --out "$out/BENCH_pipeline.json"
+    python - "$out" <<'PY'
+import json, os, sys
+
+p = json.load(open(os.path.join(sys.argv[1], "BENCH_pipeline.json")))
+for key in ("n_records", "n_queries_corpus", "nlist", "dim", "k", "nprobe",
+            "slo_s", "batch", "n_batches", "max_new_tokens", "update_frac",
+            "n_updates", "sequential", "pipelined", "qps_ratio",
+            "hidden_retrieval_fraction", "ids_identical", "recall_at_k",
+            "criteria"):
+    assert key in p, f"BENCH_pipeline.json missing key: {key}"
+for key in ("makespan_s", "qps", "retrieval_s", "decode_s", "maintenance_s"):
+    assert key in p["sequential"], f"sequential block missing key: {key}"
+for key in ("makespan_s", "final_drain_s", "qps", "trace"):
+    assert key in p["pipelined"], f"pipelined block missing key: {key}"
+t = p["pipelined"]["trace"]
+for key in ("n_batches", "n_queries", "makespan_s", "replans",
+            "final_drain_s", "retrieval_busy_s", "decode_busy_s",
+            "hidden_retrieval_s", "hidden_retrieval_fraction",
+            "bubble_fraction", "maintenance_in_bubbles_s", "stages"):
+    assert key in t, f"trace block missing key: {key}"
+for stage in ("s1", "s2", "s3", "s4"):
+    cell = t["stages"][stage]
+    for key in ("busy_s", "n_fired", "maintenance_s", "maintenance_ops",
+                "max_queue_depth"):
+        assert key in cell, f"stage {stage} missing key: {key}"
+# hard floors at quick scale: the pipeline must never be a pessimization
+# and must return bit-identical chunk ids to the sequential path; the
+# full-scale >=0.90 hidden-retrieval and >=1.5x QPS targets are recorded
+# (and met) in the repo-root BENCH_pipeline.json, where steady state has
+# room to amortize the first-batch ramp
+assert p["criteria"]["pipelined_not_slower"], \
+    f"pipelined QPS fell below sequential ({p['qps_ratio']:.2f}x)"
+assert p["criteria"]["ids_identical"], \
+    "pipelined chunk ids diverged from the sequential path"
+print(f"pipeline-smoke OK: {p['qps_ratio']:.2f}x QPS, "
+      f"{p['hidden_retrieval_fraction']:.0%} retrieval hidden, "
+      f"ids identical")
+PY
 elif [[ -z "${1:-}" ]]; then
     python -m pytest -q -m "not slow"
 else
     echo "unknown lane: $1 (expected: no arg, --full, bench-smoke," \
-         "or chaos-smoke)" >&2
+         "chaos-smoke, or pipeline-smoke)" >&2
     exit 2
 fi

@@ -53,6 +53,11 @@ class EdgeCostModel:
     fused_dequant_values_per_sec: float = 8.0e9
     # LLM prefill (Sheared-LLaMA-2.7B on Orin): tokens/s
     prefill_tokens_per_sec: float = 400.0
+    # autoregressive decode: one forward pass per tick, memory-bandwidth
+    # bound, so a continuous-batching tick advances EVERY live slot at
+    # roughly the single-stream rate — batch decode time is per-token,
+    # not per-(token, slot)
+    decode_tokens_per_sec: float = 20.0
 
     def embed_latency(self, n_chars: int) -> float:
         return self.embed_fixed_s + n_chars / self.embed_chars_per_sec
@@ -97,6 +102,11 @@ class EdgeCostModel:
     def prefill_latency(self, n_tokens: int) -> float:
         return n_tokens / self.prefill_tokens_per_sec
 
+    def decode_latency(self, n_tokens: int) -> float:
+        """Decode ticks for ``n_tokens`` output tokens (whole batch: each
+        tick advances every live slot, see ``decode_tokens_per_sec``)."""
+        return n_tokens / self.decode_tokens_per_sec
+
 
 @dataclasses.dataclass
 class LatencyBreakdown:
@@ -127,17 +137,31 @@ class LatencyBreakdown:
     degraded_clusters: int = 0  # probes shed / regens skipped under deadline
     stale_served: int = 0       # stale payloads scored instead of regenerated
 
+    # retrieval fields grouped by the serving pipeline stage that does the
+    # work (serving/pipeline.py): S1 probe/plan, S2 storage fetch / regen,
+    # S3 slab pack + score.  The three partitions are exhaustive —
+    # ``retrieval_s`` is exactly their sum, asserted in tests.
+    STAGE_FIELDS = {
+        "plan": ("embed_query_s", "centroid_search_s"),
+        "fetch": ("l2_generate_s", "l2_storage_load_s", "l2_dequant_s",
+                  "l2_cache_hit_s", "l2_stall_s", "l2_retry_backoff_s"),
+        "score": ("l2_slab_pack_s", "l2_fused_dequant_s", "l2_mem_load_s",
+                  "l2_search_s"),
+    }
+
+    def stage_s(self, stage: str) -> float:
+        """Edge seconds this query spent in one pipeline stage."""
+        return sum(getattr(self, f) for f in self.STAGE_FIELDS[stage])
+
     @property
     def retrieval_s(self) -> float:
-        return (self.embed_query_s + self.centroid_search_s
-                + self.l2_generate_s + self.l2_storage_load_s
-                + self.l2_dequant_s + self.l2_cache_hit_s
-                + self.l2_mem_load_s + self.l2_search_s
-                + self.l2_slab_pack_s + self.l2_fused_dequant_s
-                + self.l2_stall_s + self.l2_retry_backoff_s)
+        return (self.stage_s("plan") + self.stage_s("fetch")
+                + self.stage_s("score"))
 
     def as_dict(self) -> Dict[str, float]:
-        return dataclasses.asdict(self) | {"retrieval_s": self.retrieval_s}
+        d = dataclasses.asdict(self)
+        d.pop("STAGE_FIELDS", None)
+        return d | {"retrieval_s": self.retrieval_s}
 
 
 class WallTimer:

@@ -111,7 +111,7 @@ from repro.core.faults import DegradationPolicy
 from repro.core.kmeans import kmeans
 from repro.core.maintenance import (OP_DROP_STORE, OP_MERGE, OP_RESTORE,
                                     OP_SPLIT, MaintenanceScheduler)
-from repro.core.resolver import ClusterResolver, ResolutionPlan
+from repro.core.resolver import ClusterResolver, ResolutionPlan, SlabPayload
 from repro.core.storage import StorageBackend
 from repro.kernels.ivf_topk.ops import topk_ip
 from repro.kernels.slab_topk.ops import NOT_PROBED, slab_topk
@@ -125,6 +125,12 @@ class EdgeCluster:
     stored: bool = False            # embeddings persisted to storage
     active: bool = True             # tombstone after merge
     generation: int = 0             # bumped on ANY mutation (plan staleness)
+    content_generation: int = 0     # bumped only when membership/content
+    # moves (insert / update / remove / split / merge) — storage-tier flips
+    # (restore, drop) bump ``generation`` alone.  Fetched payloads stay
+    # row-aligned across tier flips, so post-fetch staleness checks (the
+    # pipeline's S3 replan gate) compare THIS stamp; fetch-time tier
+    # decisions keep using ``generation`` (a dropped copy can't be loaded)
     stored_generation: int = -1     # generation the storage copy reflects
 
     @property
@@ -135,6 +141,37 @@ class EdgeCluster:
     def storage_fresh(self) -> bool:
         """The stored copy (if any) reflects the current membership."""
         return self.stored and self.stored_generation == self.generation
+
+
+@dataclasses.dataclass
+class BatchSearchState:
+    """In-flight state of a staged batched retrieval.
+
+    :meth:`EdgeRAGIndex.search_batch` is split into three resumable stages
+    so the serving pipeline (serving/pipeline.py) can interleave other
+    work between them on the modeled clock:
+
+      ``search_begin``   S1  probe + plan (+ per-query plan-time charges)
+      ``search_fetch``   S2  raw payload resolution (storage / cache /
+                             coalesced regeneration, fault retries/stalls)
+      ``search_finish``  S3  slab pack + multi-query top-k scoring
+
+    Calling the three back-to-back is exactly ``search_batch`` — same
+    draws, same charges, bit-identical (ids, scores).
+    """
+    queries: np.ndarray                      # (Q, d) float32
+    k: int
+    plan: ResolutionPlan
+    lats: List[LatencyBreakdown]
+    missed: List[bool]
+    payloads: Optional[Dict[int, SlabPayload]] = None
+    mesh: object = None
+    shard_axis: str = "data"
+    wall_accum_s: float = 0.0                # summed stage wall times
+
+    @property
+    def nq(self) -> int:
+        return self.queries.shape[0]
 
 
 class EdgeRAGIndex:
@@ -342,12 +379,33 @@ class EdgeRAGIndex:
         ``mesh``: row-shard the batch slab over the mesh's ``shard_axis``
         and score through ``sharded_slab_topk`` — one collective per batch
         per representation.
+
+        Internally this is the three staged steps ``search_begin`` (S1),
+        ``search_fetch`` (S2), ``search_finish`` (S3) run back-to-back —
+        the serving pipeline calls them individually to overlap the stages
+        of different batches on the modeled clock.
         """
+        state = self.search_begin(query_embs, k, nprobe, query_chars,
+                                  plan=plan, deadlines=deadlines,
+                                  policy=policy, mesh=mesh,
+                                  shard_axis=shard_axis)
+        self.search_fetch(state)
+        return self.search_finish(state)
+
+    def search_begin(self, query_embs: np.ndarray, k: int, nprobe: int,
+                     query_chars: Optional[Sequence[int]] = None,
+                     *, plan: Optional[ResolutionPlan] = None,
+                     deadlines: Optional[Sequence[Optional[float]]] = None,
+                     policy: Optional[DegradationPolicy] = None,
+                     mesh=None, shard_axis: str = "data"
+                     ) -> BatchSearchState:
+        """Stage S1 of the staged retrieval: probe + plan.  Charges the
+        query-embed and centroid-search edge costs and accounts plan-time
+        probe sheds.  Returns the :class:`BatchSearchState` the later
+        stages consume."""
         queries = np.atleast_2d(np.asarray(query_embs, np.float32))
         nq = queries.shape[0]
         lats = [LatencyBreakdown() for _ in range(nq)]
-        out_ids = np.full((nq, k), -1, np.int64)
-        out_vals = np.full((nq, k), -np.inf, np.float32)
         with WallTimer() as t:
             if query_chars is not None:
                 assert len(query_chars) == nq, \
@@ -376,18 +434,45 @@ class EdgeRAGIndex:
                 # LatencyBreakdowns existed — account for them now
                 for qi, n_shed in enumerate(plan.shed_probes):
                     lats[qi].degraded_clusters += n_shed
-            # Steps 2-5: execute the plan in RAW mode and PACK — batched
-            # raw-codec storage get_many_raw, cache payloads, coalesced
-            # regeneration, every unique cluster packed exactly once into
-            # the batch slab.  Owners are charged the single-query tier
-            # formulas plus the slab-pack copy (and fused dequant for
+        return BatchSearchState(queries=queries, k=k, plan=plan, lats=lats,
+                                missed=[False] * nq, mesh=mesh,
+                                shard_axis=shard_axis,
+                                wall_accum_s=t.elapsed)
+
+    def search_fetch(self, state: BatchSearchState) -> BatchSearchState:
+        """Stage S2: resolve the plan's unique clusters to RAW payloads —
+        batched raw-codec storage ``get_many_raw``, cache payloads, one
+        coalesced regeneration per regen group (plus any fault retries /
+        stalls / degradation sheds).  Owners are charged the single-query
+        tier formulas."""
+        with WallTimer() as t:
+            state.payloads = self.resolver.execute(
+                state.plan, state.lats, state.missed, raw=True)
+        state.wall_accum_s += t.elapsed
+        return state
+
+    def search_finish(self, state: BatchSearchState
+                      ) -> Tuple[np.ndarray, np.ndarray,
+                                 List[LatencyBreakdown]]:
+        """Stage S3: pack the resolved payloads into the batch slab and
+        score — ONE ragged multi-query top-k launch per storage
+        representation — then run the Alg. 3 threshold observations."""
+        assert state.payloads is not None, "search_fetch has not run"
+        queries, k, plan, lats, missed = (state.queries, state.k, state.plan,
+                                          state.lats, state.missed)
+        nq = state.nq
+        probed_per_q = plan.probed_per_q
+        out_ids = np.full((nq, k), -1, np.int64)
+        out_vals = np.full((nq, k), -np.inf, np.float32)
+        with WallTimer() as t:
+            # Pack every unique cluster exactly once into the batch slab;
+            # owners are charged the pack copy (and fused dequant for
             # quantized payloads) once per slab.
-            owner = plan.owner
-            missed = [False] * nq
-            slab = self.resolver.execute_slab(plan, lats, missed)
+            slab = self.resolver.pack_slab(plan, state.payloads, lats)
             # Non-owners re-read the already-resident embeddings from DRAM
             # (resident set is invariant here: nothing mutates the cache
-            # between execute_slab() and scoring, so hoist the byte count)
+            # between pack_slab() and scoring, so hoist the byte count)
+            owner = plan.owner
             resident = self.memory_bytes()
             for qi, probed in enumerate(probed_per_q):
                 for cid in probed:
@@ -410,11 +495,11 @@ class EdgeRAGIndex:
                 if seg.rows == 0:
                     continue
                 virt = virts[seg.kind]
-                if mesh is not None and seg.rows >= k:
+                if state.mesh is not None and seg.rows >= k:
                     from repro.core.sharded_retrieval import sharded_slab_topk
                     vals, rows = sharded_slab_topk(
-                        seg.emb, queries, virt, k, mesh, shard_axis,
-                        scales=seg.scales)
+                        seg.emb, queries, virt, k, state.mesh,
+                        state.shard_axis, scales=seg.scales)
                 else:
                     vals, rows = slab_topk(seg.emb, queries, virt, k,
                                            scales=seg.scales)
@@ -446,8 +531,9 @@ class EdgeRAGIndex:
                 if n_valid[qi]:
                     lats[qi].l2_search_s = self.cost.search_latency(
                         int(n_valid[qi]), self.dim)
+        state.wall_accum_s += t.elapsed
         for lat in lats:                       # amortized batch wall time
-            lat.wall_s = t.elapsed / nq
+            lat.wall_s = state.wall_accum_s / nq
         # ---- Algorithm 3: adapt the threshold, once per query in order
         # (queries that probed nothing did no level-2 work: no observation,
         # matching the single-query early-return) ----
@@ -502,6 +588,7 @@ class EdgeRAGIndex:
         cl.ids = np.append(cl.ids, np.int64(chunk_id))
         cl.char_count += len(text)
         cl.generation += 1
+        cl.content_generation += 1
         self._chunk_chars[int(chunk_id)] = len(text)
         self._chunk_cluster[int(chunk_id)] = cid
         cl.gen_latency_est = self.cost.embed_latency(cl.char_count)
@@ -534,6 +621,7 @@ class EdgeRAGIndex:
         cl.char_count += len(text) - self._chunk_chars.get(int(chunk_id), 0)
         self._chunk_chars[int(chunk_id)] = len(text)
         cl.generation += 1
+        cl.content_generation += 1
         cl.gen_latency_est = self.cost.embed_latency(cl.char_count)
         self.cache.invalidate(cid)                      # stale embeddings
         if cl.char_count > self.split_max_chars:
@@ -561,6 +649,7 @@ class EdgeRAGIndex:
         cl.ids = np.delete(cl.ids, pos)
         cl.char_count -= self._chunk_chars.pop(int(chunk_id), 0)
         cl.generation += 1
+        cl.content_generation += 1
         del self._chunk_cluster[int(chunk_id)]
         cl.gen_latency_est = self.cost.embed_latency(cl.char_count)
         self.cache.invalidate(cid)
@@ -678,7 +767,8 @@ class EdgeRAGIndex:
                 (cid, len(self.clusters)), parts):
             newcl = EdgeCluster(ids=ids, char_count=chars,
                                 gen_latency_est=self.cost.embed_latency(chars),
-                                generation=next_gen)
+                                generation=next_gen,
+                                content_generation=cl.content_generation + 1)
             if self.store_heavy and newcl.gen_latency_est > self.slo_s:
                 self.storage.put(slot, sub)
                 newcl.stored = True
@@ -722,6 +812,7 @@ class EdgeRAGIndex:
         other.ids = np.concatenate([other.ids, cl.ids])
         other.char_count += cl.char_count
         other.generation += 1
+        other.content_generation += 1
         for i in cl.ids:
             self._chunk_cluster[int(i)] = tgt
         other.gen_latency_est = self.cost.embed_latency(other.char_count)
@@ -744,6 +835,7 @@ class EdgeRAGIndex:
         cl.ids = np.zeros((0,), np.int64)
         cl.char_count = 0
         cl.generation += 1              # tombstoning invalidates plans too
+        cl.content_generation += 1
         self.centroids[cid] = -np.ones(self.dim) / np.sqrt(self.dim)  # bury
         if will_split:
             self._dispatch_maintenance([(OP_SPLIT, tgt)])

@@ -92,6 +92,12 @@ class ResolutionPlan:
     generations: Dict[int, int] = dataclasses.field(default_factory=dict)
     # ^ plan-time generation stamp per planned cluster; execute() treats any
     #   mismatch with the live cluster as a stale plan entry
+    content_generations: Dict[int, int] = \
+        dataclasses.field(default_factory=dict)
+    # ^ plan-time CONTENT stamp (membership/content mutations only, not
+    #   storage-tier flips) — the post-fetch staleness check: payloads
+    #   already fetched stay row-aligned across restore/drop, so only a
+    #   content move forces the pipeline's S3 replan
     prefetched: Optional[Dict[int, Dict[str, np.ndarray]]] = None
     # ^ early storage loads — RAW codec payloads (never decoded here; the
     #   slab scorer consumes them via fused dequant)
@@ -114,6 +120,13 @@ class ResolutionPlan:
         (missing snapshot = plan predates generation stamps: trust it)."""
         return self.generations.get(cid, cluster.generation) \
             == cluster.generation
+
+    def content_fresh(self, cid: int, cluster) -> bool:
+        """True iff ``cluster``'s MEMBERSHIP/CONTENT has not moved since
+        plan time — storage-tier flips (restore / drop) don't count.  The
+        right staleness predicate once payloads are already in hand."""
+        return self.content_generations.get(
+            cid, cluster.content_generation) == cluster.content_generation
 
     @property
     def regen_clusters(self) -> List[int]:
@@ -338,7 +351,9 @@ class ClusterResolver:
             owner=owner, tier=tier, storage_clusters=storage_clusters,
             cached=cached, regen_groups=self._coalesce(pending),
             restore=restore,
-            generations={cid: ix.clusters[cid].generation for cid in owner})
+            generations={cid: ix.clusters[cid].generation for cid in owner},
+            content_generations={cid: ix.clusters[cid].content_generation
+                                 for cid in owner})
 
     def _coalesce(self, pending: List[int]) -> List[List[int]]:
         if not pending:
@@ -610,11 +625,24 @@ class ClusterResolver:
     # ------------------------------------------------------------------
     # packed-slab execution (the search_batch scoring engine)
     # ------------------------------------------------------------------
-    def execute_slab(self, plan: ResolutionPlan,
-                     lats: List[LatencyBreakdown],
-                     missed: List[bool]) -> SlabLayout:
-        """RAW-mode :meth:`execute` + pack: every resolved cluster lands
-        exactly once in a :class:`SlabLayout` segment of its storage
+    def stale_cids(self, plan: ResolutionPlan) -> List[int]:
+        """Planned clusters whose MEMBERSHIP/CONTENT moved since plan time
+        — the staged pipeline's S3 entry check: payloads fetched at S2 for
+        these clusters may no longer row-align, so the batch re-enters S1
+        (re-plan + re-fetch) instead of packing a slab that would trip the
+        pack-time defenses.  Storage-tier flips (a bubble-drain restore or
+        drop bumping ``generation`` alone) deliberately do NOT count:
+        payloads already in hand don't care where later fetches would come
+        from, and counting them would make every in-flight plan stale the
+        moment maintenance runs."""
+        return [cid for cid in plan.owner
+                if not plan.content_fresh(cid, self.index.clusters[cid])]
+
+    def pack_slab(self, plan: ResolutionPlan,
+                  payloads: Dict[int, object],
+                  lats: List[LatencyBreakdown]) -> SlabLayout:
+        """Pack resolved RAW payloads into a :class:`SlabLayout`: every
+        cluster lands exactly once in the segment of its storage
         representation; the per-cluster payloads become views into the
         slab (:meth:`SlabLayout.view`).  Each cluster's owner is charged
         the pack copy (``l2_slab_pack_s``) and, for fp16/int8 payloads,
@@ -623,7 +651,6 @@ class ClusterResolver:
         re-concatenated shared clusters Q times over).
         """
         ix = self.index
-        payloads = self.execute(plan, lats, missed, raw=True)
         slab = SlabLayout.pack(ix.dim, list(plan.owner), payloads,
                                lambda cid: ix.clusters[cid].ids)
         for cid, owner_qi in plan.owner.items():
@@ -636,6 +663,15 @@ class ClusterResolver:
                 lat.l2_fused_dequant_s += ix.cost.fused_dequant_latency(
                     p.emb.size)
         return slab
+
+    def execute_slab(self, plan: ResolutionPlan,
+                     lats: List[LatencyBreakdown],
+                     missed: List[bool]) -> SlabLayout:
+        """RAW-mode :meth:`execute` + :meth:`pack_slab` in one step (the
+        sequential path; the staged pipeline runs them as separate S2/S3
+        stages so decode can overlap the fetch)."""
+        payloads = self.execute(plan, lats, missed, raw=True)
+        return self.pack_slab(plan, payloads, lats)
 
     # ------------------------------------------------------------------
     # regeneration (shared with the maintenance paths)

@@ -1,4 +1,6 @@
-from repro.serving.engine import RAGEngine, RAGResponse  # noqa
+from repro.serving.engine import BatchJob, RAGEngine, RAGResponse  # noqa
 from repro.serving.scheduler import Request, RequestScheduler  # noqa
 from repro.serving.simulator import EdgeSimulator, simulate_ttft  # noqa
 from repro.serving.batching import ContinuousBatcher  # noqa
+from repro.serving.pipeline import (PipelineBatch, PipelineTrace,  # noqa
+                                    StagedPipeline)

@@ -7,12 +7,35 @@ paper's headline metric (it is not optimized by EdgeRAG).
 The engine runs the REAL pipeline end to end on this machine (reduced model
 configs, synthetic corpora) while accounting edge latency through the cost
 model — both are reported on every response.
+
+STAGED SERVING (serving/pipeline.py): ``answer_batch`` is internally four
+explicit stages over a :class:`BatchJob` —
+
+  ``stage_plan``    S1  probe + plan           (``index.search_begin``)
+  ``stage_fetch``   S2  storage fetch / regen  (``index.search_fetch``)
+  ``stage_score``   S3  slab pack + score + prompt assembly
+                        (``index.search_finish``)
+  ``stage_decode``  S4  prefill + decode ticks (batcher / generator)
+
+Run back-to-back they reproduce the sequential path exactly (bit-identical
+ids / charges); the :class:`~repro.serving.pipeline.StagedPipeline` instead
+fires them as independent stage resources on the modeled clock so batch
+N+1's retrieval hides under batch N's decode.  Each stage records its
+modeled service time in ``BatchJob.stage_edge_s`` — the occupancy the
+pipeline schedules with.
+
+Deferred-maintenance drain ownership is explicit: with
+``maintenance_owner="engine"`` (default) ``answer_batch`` drains the
+index's queue after decode; ``"external"`` means some other component (a
+``RequestScheduler`` idle-gap hook, or the pipeline's bubble-filler) owns
+draining and the engine never touches the queue — previously both could
+run in the same configuration and double-drain.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -32,16 +55,59 @@ class RAGResponse:
     ttft_edge_s: float
     ttft_wall_s: float
     decode_wall_s: float = 0.0
+    decode_edge_s: float = 0.0       # modeled decode ticks for the batch
     prefetch_saved_s: float = 0.0    # edge seconds hidden by prefetch overlap
     maintenance_s: float = 0.0       # deferred-maintenance edge seconds the
     #                                  batch drained after decode (amortized;
     #                                  off the TTFT critical path)
+    queue_wait_s: float = 0.0        # modeled wait in stage queues before S1
+    #                                  fired (staged pipeline only)
     # failure model / degradation ladder (core/faults.py):
     deadline_s: Optional[float] = None   # TTFT deadline this request carried
+    #                                  (queue wait already subtracted when it
+    #                                  came through the staged pipeline)
     outcome: str = "ok"              # "ok" | "degraded" | "missed"
     retries: int = 0                 # storage read attempts retried
     degraded_clusters: int = 0       # probes / regens shed under deadline
     stale_served: int = 0            # stale payloads scored, flagged
+
+
+@dataclasses.dataclass
+class BatchJob:
+    """One batch of queries moving through the staged serving pipeline.
+
+    Created by :meth:`RAGEngine.make_job`; each ``stage_*`` method consumes
+    the fields of the previous stage and fills its own.  ``stage_edge_s``
+    maps stage name ("s1".."s4") to that stage's modeled service time for
+    this batch — unique work, not per-query accounting: the fused centroid
+    top-k counts once per batch, shared-cluster resolutions once per owner
+    (per-query ``LatencyBreakdown`` attribution is unchanged).
+    """
+    queries: List[str]
+    query_embs: np.ndarray
+    get_chunks: Callable[[Sequence[int]], List[str]]
+    deadlines: Optional[List[Optional[float]]] = None
+    policy: Optional[DegradationPolicy] = None
+    prefetch: bool = False
+    # stage products:
+    state: Any = None                       # BatchSearchState (S1 → S3)
+    ids: Optional[np.ndarray] = None        # (Q, k) chunk ids (S3)
+    lats: Optional[List[LatencyBreakdown]] = None
+    id_lists: Optional[List[List[int]]] = None
+    contexts: Optional[List[List[str]]] = None
+    prompts: Optional[List[str]] = None
+    prefill_edge: Optional[List[float]] = None
+    out_tokens: Optional[List[List[int]]] = None
+    decode_wall: float = 0.0
+    retrieval_wall: float = 0.0
+    maintenance_s: float = 0.0
+    queue_wait_s: float = 0.0               # set by the pipeline at S1 fire
+    replans: int = 0                        # stale-plan S1 re-entries
+    stage_edge_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def nq(self) -> int:
+        return len(self.queries)
 
 
 class RAGEngine:
@@ -50,7 +116,9 @@ class RAGEngine:
     def __init__(self, index, generator=None, *,
                  cost_model: Optional[EdgeCostModel] = None,
                  k: int = 10, nprobe: int = 8, max_new_tokens: int = 16,
-                 maintenance_budget_s: Optional[float] = None):
+                 maintenance_budget_s: Optional[float] = None,
+                 maintenance_owner: str = "engine"):
+        assert maintenance_owner in ("engine", "external"), maintenance_owner
         self.index = index
         self.generator = generator        # GeneratorModel or None (sim-only)
         self.cost = cost_model or EdgeCostModel()
@@ -60,6 +128,11 @@ class RAGEngine:
         # per-step budget for draining the index's deferred-maintenance
         # queue after decode (None = the scheduler's own default)
         self.maintenance_budget_s = maintenance_budget_s
+        # who drains the index's deferred-maintenance queue: "engine" =
+        # answer_batch drains after decode (the default); "external" = a
+        # scheduler hook or the staged pipeline owns draining and the
+        # engine never touches the queue.  Exactly one component drains.
+        self.maintenance_owner = maintenance_owner
 
     def answer_batch(self, queries: Sequence[str], query_embs: np.ndarray,
                      get_chunks: Callable[[Sequence[int]], List[str]],
@@ -92,38 +165,128 @@ class RAGEngine:
         """
         if not len(queries):
             return []
-        t0 = time.perf_counter()
+        job = self.make_job(queries, query_embs, get_chunks,
+                            deadlines=deadlines, policy=policy,
+                            prefetch=prefetch)
+        self.stage_plan(job)
+        self.stage_fetch(job)
+        self.stage_score(job)
+        self.stage_decode(job, batcher=batcher)
+        # deferred index maintenance drains AFTER decode — split / merge /
+        # restore work queued by online inserts/removes runs between serving
+        # steps instead of inside a query's TTFT window.  Only when the
+        # engine OWNS draining: with maintenance_owner="external" a
+        # scheduler hook / the staged pipeline drains instead (never both).
+        sched = getattr(self.index, "maintenance", None)
+        if (self.maintenance_owner == "engine" and sched is not None
+                and len(sched)):
+            job.maintenance_s = sched.drain(self.maintenance_budget_s).edge_s
+        return self.finalize(job)
+
+    # ------------------------------------------------------------------
+    # the staged path: make_job + stage_plan/fetch/score/decode + finalize
+    # ------------------------------------------------------------------
+    def make_job(self, queries: Sequence[str], query_embs: np.ndarray,
+                 get_chunks: Callable[[Sequence[int]], List[str]],
+                 *, deadlines: Optional[Sequence[Optional[float]]] = None,
+                 policy: Optional[DegradationPolicy] = None,
+                 prefetch: bool = False) -> BatchJob:
+        """Wrap one batch as a :class:`BatchJob` for the staged path."""
         query_embs = np.atleast_2d(np.asarray(query_embs, np.float32))
-        nq = len(queries)
-        kw = {}
-        prefetch = prefetch and hasattr(self.index, "plan_batch")
-        retrieval_deadlines = None
         if deadlines is not None:
-            assert len(deadlines) == nq, \
-                f"{len(deadlines)} deadlines for {nq} queries"
+            assert len(deadlines) == len(queries), \
+                f"{len(deadlines)} deadlines for {len(queries)} queries"
             policy = policy or DegradationPolicy()
+        return BatchJob(queries=list(queries), query_embs=query_embs,
+                        get_chunks=get_chunks,
+                        deadlines=None if deadlines is None
+                        else list(deadlines),
+                        policy=policy,
+                        prefetch=prefetch
+                        and hasattr(self.index, "plan_batch"))
+
+    def stage_plan(self, job: BatchJob) -> BatchJob:
+        """S1 — probe + plan: fused centroid top-k, tier planning, rung-1
+        probe trimming under the job's (queue-wait-adjusted) deadlines.
+        Service time: per-query embed charges + ONE fused centroid search
+        (it runs once per batch, not once per query)."""
+        t0 = time.perf_counter()
+        kw = {}
+        retrieval_deadlines = None
+        if job.deadlines is not None:
             retrieval_deadlines = [
-                None if d is None else d * (1.0 - policy.prefill_reserve_frac)
-                for d in deadlines]
+                None if d is None
+                else d * (1.0 - job.policy.prefill_reserve_frac)
+                for d in job.deadlines]
             kw["deadlines"] = retrieval_deadlines
-            kw["policy"] = policy
-        if prefetch:
+            kw["policy"] = job.policy
+        if job.prefetch:
             kw["plan"] = self.index.plan_batch(
-                query_embs, self.nprobe, prefetch_storage=True,
-                deadlines=retrieval_deadlines, policy=policy,
-                query_chars=[len(q) for q in queries])
+                job.query_embs, self.nprobe, prefetch_storage=True,
+                deadlines=retrieval_deadlines, policy=job.policy,
+                query_chars=[len(q) for q in job.queries])
             kw.pop("deadlines", None)    # the plan carries them already
             kw.pop("policy", None)
-        ids, _, lats = self.index.search_batch(
-            query_embs, self.k, self.nprobe,
-            query_chars=[len(q) for q in queries], **kw)
-        id_lists = [[int(i) for i in ids[qi] if i >= 0] for qi in range(nq)]
-        contexts = [get_chunks(idl) for idl in id_lists]
-        prompts = [" ".join(ctx + [q]) for ctx, q in zip(contexts, queries)]
-        retrieval_wall = time.perf_counter() - t0
+        job.state = self.index.search_begin(
+            job.query_embs, self.k, self.nprobe,
+            query_chars=[len(q) for q in job.queries], **kw)
+        job.retrieval_wall += time.perf_counter() - t0
+        lats = job.state.lats
+        job.stage_edge_s["s1"] = (
+            sum(lat.embed_query_s for lat in lats)
+            + (lats[0].centroid_search_s if lats else 0.0))
+        return job
 
-        out_tokens: List[List[int]] = [[] for _ in range(nq)]
-        decode_wall = 0.0
+    def stage_fetch(self, job: BatchJob, *,
+                    extra_wait_s: float = 0.0) -> BatchJob:
+        """S2 — storage fetch / regen: raw payload resolution (batched
+        ``get_many_raw``, cache, coalesced regeneration, fault retries /
+        stalls) with degradation rungs 2-3 against the plan's budgets.
+        ``extra_wait_s``: modeled seconds this batch sat in the S2 queue —
+        shrinks the plan's remaining retrieval budgets so the ladder sees
+        queue wait, not just execution time.  Service time: the owner
+        charges (each unique cluster is resolved exactly once)."""
+        t0 = time.perf_counter()
+        plan = job.state.plan
+        if extra_wait_s > 0.0 and plan.deadlines is not None:
+            plan.deadlines = [None if d is None
+                              else max(0.0, d - extra_wait_s)
+                              for d in plan.deadlines]
+        self.index.search_fetch(job.state)
+        job.retrieval_wall += time.perf_counter() - t0
+        job.stage_edge_s["s2"] = sum(lat.stage_s("fetch")
+                                     for lat in job.state.lats)
+        return job
+
+    def stage_score(self, job: BatchJob) -> BatchJob:
+        """S3 — slab pack + multi-query top-k scoring, then context fetch
+        and prompt assembly.  Service time: the score-group charges (pack
+        copies, fused dequant, shared-hit DRAM re-reads, fused top-k)."""
+        t0 = time.perf_counter()
+        job.ids, _, job.lats = self.index.search_finish(job.state)
+        nq = job.nq
+        job.id_lists = [[int(i) for i in job.ids[qi] if i >= 0]
+                        for qi in range(nq)]
+        job.contexts = [job.get_chunks(idl) for idl in job.id_lists]
+        job.prompts = [" ".join(ctx + [q])
+                       for ctx, q in zip(job.contexts, job.queries)]
+        job.prefill_edge = [
+            self.cost.prefill_latency(max(1, len(p) // 3))
+            for p in job.prompts]
+        job.retrieval_wall += time.perf_counter() - t0
+        job.stage_edge_s["s3"] = sum(lat.stage_s("score")
+                                     for lat in job.lats)
+        return job
+
+    def stage_decode(self, job: BatchJob, *, batcher=None) -> BatchJob:
+        """S4 — prefill + decode ticks, through a
+        :class:`~repro.serving.batching.ContinuousBatcher` (``batcher=``)
+        or the per-query generator.  Service time: summed per-query prefill
+        + ONE decode pass (continuous-batching ticks advance every live
+        slot, so batch decode is per-token, not per-(token, slot))."""
+        nq = job.nq
+        job.out_tokens = [[] for _ in range(nq)]
+        job.decode_wall = 0.0
         if batcher is not None:
             tokenizer = (self.generator.tokenizer if self.generator
                          is not None else HashingTokenizer(
@@ -133,59 +296,62 @@ class RAGEngine:
                 [{"id": qi,
                   "prompt_tokens": tokenizer.encode(p, batcher.max_len),
                   "max_new_tokens": self.max_new_tokens}
-                 for qi, p in enumerate(prompts)])
-            decode_wall = (time.perf_counter() - t1) / nq
+                 for qi, p in enumerate(job.prompts)])
+            job.decode_wall = (time.perf_counter() - t1) / nq
             for qi in range(nq):
-                out_tokens[qi] = completed.get(qi, [])
+                job.out_tokens[qi] = completed.get(qi, [])
         elif self.generator is not None:
             t1 = time.perf_counter()
-            for qi, p in enumerate(prompts):
-                out_tokens[qi] = self.generator.generate(
+            for qi, p in enumerate(job.prompts):
+                job.out_tokens[qi] = self.generator.generate(
                     p, self.max_new_tokens)
-            decode_wall = (time.perf_counter() - t1) / nq
+            job.decode_wall = (time.perf_counter() - t1) / nq
+        job.stage_edge_s["s4"] = (
+            sum(job.prefill_edge)
+            + self.cost.decode_latency(self.max_new_tokens))
+        return job
 
-        # deferred index maintenance drains AFTER decode — split / merge /
-        # restore work queued by online inserts/removes runs between serving
-        # steps instead of inside a query's TTFT window
-        maintenance_s = 0.0
-        sched = getattr(self.index, "maintenance", None)
-        if sched is not None and len(sched):
-            maintenance_s = sched.drain(self.maintenance_budget_s).edge_s
-
+    def finalize(self, job: BatchJob) -> List[RAGResponse]:
+        """Assemble one :class:`RAGResponse` per query from the finished
+        job (pure accounting — no index or model work)."""
+        nq = job.nq
+        decode_edge = self.cost.decode_latency(self.max_new_tokens)
         responses = []
         for qi in range(nq):
-            n_prompt_tokens = max(1, len(prompts[qi]) // 3)
-            prefill_edge = self.cost.prefill_latency(n_prompt_tokens)
-            retrieval_edge = lats[qi].retrieval_s
+            prefill_edge = job.prefill_edge[qi]
+            lat = job.lats[qi]
+            retrieval_edge = lat.retrieval_s
             saved = 0.0
-            if prefetch:
+            if job.prefetch:
                 # storage I/O was issued at plan time: it runs under the
                 # rest of this query's retrieval work instead of before it
                 # (an injected stall is I/O-side, so it overlaps too)
-                io = lats[qi].l2_storage_load_s + lats[qi].l2_stall_s
+                io = lat.l2_storage_load_s + lat.l2_stall_s
                 saved = min(io, retrieval_edge - io)
             ttft_edge = retrieval_edge - saved + prefill_edge
-            deadline = None if deadlines is None else deadlines[qi]
-            degraded = bool(lats[qi].degraded_clusters
-                            or lats[qi].stale_served)
+            deadline = (None if job.deadlines is None
+                        else job.deadlines[qi])
+            degraded = bool(lat.degraded_clusters or lat.stale_served)
             outcome = "ok"
             if deadline is not None and ttft_edge > deadline:
                 outcome = "missed"
             elif degraded:
                 outcome = "degraded"
             responses.append(RAGResponse(
-                query=queries[qi], chunk_ids=id_lists[qi],
-                context=contexts[qi], output_tokens=out_tokens[qi],
-                retrieval=lats[qi], prefill_edge_s=prefill_edge,
+                query=job.queries[qi], chunk_ids=job.id_lists[qi],
+                context=job.contexts[qi], output_tokens=job.out_tokens[qi],
+                retrieval=lat, prefill_edge_s=prefill_edge,
                 ttft_edge_s=ttft_edge,
-                ttft_wall_s=retrieval_wall / nq,
-                decode_wall_s=decode_wall,
+                ttft_wall_s=job.retrieval_wall / nq,
+                decode_wall_s=job.decode_wall,
+                decode_edge_s=decode_edge,
                 prefetch_saved_s=saved,
-                maintenance_s=maintenance_s / nq,
+                maintenance_s=job.maintenance_s / nq,
+                queue_wait_s=job.queue_wait_s,
                 deadline_s=deadline, outcome=outcome,
-                retries=lats[qi].retries,
-                degraded_clusters=lats[qi].degraded_clusters,
-                stale_served=lats[qi].stale_served))
+                retries=lat.retries,
+                degraded_clusters=lat.degraded_clusters,
+                stale_served=lat.stale_served))
         return responses
 
     def answer(self, query: str, query_emb: np.ndarray,

@@ -57,6 +57,8 @@ class RequestScheduler:
         self._next_rid = 0
         self.maintenance_s = 0.0     # total deferred-maintenance seconds
         self.errors: List[str] = []  # serve_fn exceptions (failed requests)
+        self.pipeline_trace = None   # PipelineTrace from run_pipelined
+        self.pipeline_responses = []  # flat RAGResponses from run_pipelined
 
     def submit(self, arrival_s: float, query: str = "", query_emb=None,
                query_chars: int = 0, slo_s: float = 1.0) -> Request:
@@ -116,6 +118,46 @@ class RequestScheduler:
                     m = float(maintenance_fn(gap))
                     self.maintenance_s += m
                     clock += m
+        return self.completed
+
+    def run_pipelined(self, pipeline, *, batch_size: int = 8,
+                      policy=None) -> List[Request]:
+        """Drain the queue through a
+        :class:`~repro.serving.pipeline.StagedPipeline` instead of the
+        serial ``serve_fn`` loop: requests are grouped into arrival-order
+        batches of ``batch_size`` and the pipeline overlaps each batch's
+        retrieval with its predecessors' decode on the modeled clock.
+
+        A batch is admitted when its LAST member has arrived (the batch's
+        ``arrival_s``); each member's queue wait — admission wait plus any
+        stage-queue wait — is charged against its deadline by the
+        pipeline, so the degradation ladder sees the time actually left.
+        Request ``start_s`` / ``finish_s`` are stamped by the pipeline
+        (decode-stage entry / first token out) and the run's
+        :class:`~repro.serving.pipeline.PipelineTrace` lands on
+        ``self.pipeline_trace``.
+        """
+        from repro.serving.pipeline import PipelineBatch
+
+        reqs = []
+        while self._queue:
+            reqs.append(heapq.heappop(self._queue))
+        batches = []
+        for i in range(0, len(reqs), batch_size):
+            group = reqs[i:i + batch_size]
+            batches.append(PipelineBatch(
+                queries=[r.query for r in group],
+                query_embs=[r.query_emb for r in group],
+                arrival_s=max(r.arrival_s for r in group),
+                slos=[r.slo_s for r in group],
+                policy=policy,
+                requests=group))
+        responses, trace = pipeline.run(batches)
+        self.pipeline_trace = trace
+        self.maintenance_s += (trace.maintenance_in_bubbles_s
+                               + trace.final_drain_s)
+        self.completed.extend(reqs)
+        self.pipeline_responses = [r for batch in responses for r in batch]
         return self.completed
 
     def slo_hit_rate(self) -> float:

@@ -1,4 +1,6 @@
-"""Continuous batching == sequential decoding, token for token."""
+"""Continuous batching == sequential decoding, token for token — plus the
+slot-admission edge cases (full pool refusal, free-on-finish reuse,
+zero-live-slot ticks)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -61,3 +63,43 @@ def test_slots_reused():
     outs = batcher.run(reqs)
     assert len(outs) == 6                      # 6 requests through 2 slots
     assert all(len(v) == 3 for v in outs.values())
+
+
+def _tiny_batcher(num_slots=2):
+    cfg = configs.get_config("stablelm-1.6b").reduced(num_layers=1,
+                                                      d_model=64)
+    params = M.init_params(cfg, KEY)
+    return ContinuousBatcher(cfg, params, num_slots=num_slots, max_len=64)
+
+
+def test_admit_returns_none_when_all_slots_busy():
+    b = _tiny_batcher(num_slots=2)
+    assert b.admit(0, [3, 4, 5], 4) is not None
+    assert b.admit(1, [6, 7], 4) is not None
+    # pool exhausted: admission is refused, nothing is clobbered
+    assert b.admit(2, [8, 9], 4) is None
+    assert sorted(s.request_id for s in b.slots) == [0, 1]
+    assert 2 not in b.completed
+
+
+def test_slot_freed_on_finish_then_readmitted():
+    b = _tiny_batcher(num_slots=1)
+    slot0 = b.admit(0, [3, 4, 5], 2)
+    assert slot0 == 0 and b.admit(1, [6, 7], 2) is None
+    b.tick()
+    b.tick()                                   # budget of 2 reached
+    assert 0 in b.completed and len(b.completed[0]) == 2
+    assert b.slots[0].free                     # freed immediately
+    # the freed slot is reusable and per-slot state was reset, not leaked
+    slot1 = b.admit(1, [6, 7], 2)
+    assert slot1 == 0
+    assert b.slots[0].tokens_out == []
+    assert int(b.lens[0]) == 2                 # fresh prefix, not 3+2
+
+
+def test_tick_with_zero_live_slots_is_a_noop():
+    b = _tiny_batcher(num_slots=2)
+    lens_before = b.lens.copy()
+    assert b.tick() == 0                       # no active slots: no decode
+    assert np.array_equal(b.lens, lens_before)
+    assert b.completed == {}

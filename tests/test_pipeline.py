@@ -1,0 +1,318 @@
+"""Staged serving pipeline (serving/pipeline.py + the engine's staged
+path): bitwise parity of the staged search with search_batch and the
+sequential loop, maintenance-in-bubbles semantics (including the
+ramp-is-not-a-bubble gate), stale-plan S3 re-entry, queue-wait deadline
+propagation (a delayed request degrades instead of silently missing), and
+explicit drain ownership."""
+import numpy as np
+import pytest
+
+from repro.core import EdgeCostModel, EdgeRAGIndex
+from repro.core.faults import DegradationPolicy
+from repro.data import generate_dataset
+from repro.serving.engine import RAGEngine
+from repro.serving.pipeline import PipelineBatch, StagedPipeline
+from repro.serving.scheduler import RequestScheduler
+
+pytestmark = pytest.mark.fast
+
+DIM = 32
+K = 5
+NPROBE = 5
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return generate_dataset(n_records=500, dim=DIM, n_topics=16,
+                            n_queries=24, seed=5)
+
+
+def _fresh(ds, **kw):
+    kw.setdefault("slo_s", 0.15)
+    er = EdgeRAGIndex(DIM, ds.embedder, ds.get_chunks, EdgeCostModel(), **kw)
+    er.build(ds.chunk_ids, ds.texts, nlist=16, embeddings=ds.embeddings,
+             seed=1)
+    return er
+
+
+def _engine(er, **kw):
+    kw.setdefault("k", K)
+    kw.setdefault("nprobe", NPROBE)
+    return RAGEngine(er, None, **kw)
+
+
+def _batches(ds, n_batches, per_batch=4, arrivals=None):
+    out = []
+    for b in range(n_batches):
+        qis = [(b * per_batch + i) % len(ds.query_embs)
+               for i in range(per_batch)]
+        out.append(PipelineBatch(
+            queries=[f"q{qi}" for qi in qis],
+            query_embs=np.stack([ds.query_embs[qi] for qi in qis]),
+            arrival_s=0.0 if arrivals is None else arrivals[b]))
+    return out
+
+
+def _seed_maintenance(ds, er, n=6, first_id=910_000):
+    """Insert near-duplicates so deferred restores queue up (the index is
+    built with a tight slo_s, so touched clusters go over it)."""
+    rng = np.random.default_rng(11)
+    for j in range(n):
+        nid = first_id + j
+        emb = ds.embeddings[int(rng.integers(ds.n))] \
+            + 0.03 * rng.standard_normal(DIM)
+        emb = (emb / np.linalg.norm(emb)).astype(np.float32)
+        text = f"doc-{nid} " + "tok " * 20
+        ds.add_chunk(nid, text, emb)
+        er.insert(nid, text)
+    return n
+
+
+# ----------------------------------------------------------------------
+# staged search parity
+# ----------------------------------------------------------------------
+def test_staged_search_bitwise_matches_search_batch(ds):
+    staged = _fresh(ds)
+    batch = _fresh(ds)
+    embs = ds.query_embs[:8]
+    state = staged.search_begin(embs, K, NPROBE)
+    staged.search_fetch(state)
+    s_ids, s_vals, s_lats = staged.search_finish(state)
+    b_ids, b_vals, b_lats = batch.search_batch(embs, K, NPROBE)
+    assert np.array_equal(s_ids, b_ids)
+    assert np.array_equal(s_vals, b_vals)
+    for sl, bl in zip(s_lats, b_lats):
+        assert sl.retrieval_s == pytest.approx(bl.retrieval_s)
+
+
+def test_pipeline_answers_match_sequential_answer_batch(ds):
+    pipe_er = _fresh(ds)
+    seq_er = _fresh(ds)
+    batches = _batches(ds, n_batches=3)
+    pipe = StagedPipeline(_engine(pipe_er), ds.get_chunks)
+    responses, trace = pipe.run(batches)
+    seq_eng = _engine(seq_er)
+    for b, resp_batch in zip(batches, responses):
+        seq = seq_eng.answer_batch(b.queries, b.query_embs, ds.get_chunks)
+        assert [r.chunk_ids for r in resp_batch] \
+            == [r.chunk_ids for r in seq]
+    assert trace.n_batches == 3
+    # stage occupancy is the engine's stage accounting, re-aggregated
+    assert trace.stages["s4"].busy_s > 0
+    assert trace.stages["s2"].busy_s > 0
+    assert trace.hidden_retrieval_fraction > 0   # some overlap happened
+
+
+# ----------------------------------------------------------------------
+# maintenance in bubbles
+# ----------------------------------------------------------------------
+def _seed_offpath_restores(ds, er, batches, n=2):
+    """Queue restore work on clusters the batch queries will NOT probe.
+    Probed clusters self-heal during S2 (execute re-persists stale stored
+    copies — the Alg. 1 self-heal), which would revalidate the queued ops
+    away before any bubble; off-path clusters stay dirty until a drain."""
+    scratch = _fresh(ds)             # probe-set lookup without touching er
+    probed = set()
+    for b in batches:
+        probed |= set(scratch.plan_batch(b.query_embs, NPROBE).owner)
+    targets = [cid for cid in range(er.nlist) if cid not in probed][:n]
+    assert targets, "every cluster probed — shrink the batch"
+    for cid in targets:
+        chunk = int(er.clusters[cid].ids[0])
+        # a long in-place rewrite pushes the cluster over the storage SLO:
+        # update() enqueues the deferred restore
+        text = f"doc-{chunk} rev " + "tok " * 1000
+        ds.add_chunk(chunk, text, ds.embedder.table[chunk])
+        er.update(chunk, text)
+    return targets
+
+
+def test_maintenance_drains_in_bubbles_without_changing_answers(ds):
+    # the same 4 queries every batch: a narrow probe footprint leaves
+    # off-path clusters for the seeded restores to wait on
+    one = _batches(ds, n_batches=1)[0]
+    batches = [PipelineBatch(queries=list(one.queries),
+                             query_embs=one.query_embs.copy())
+               for _ in range(4)]
+    # cache_bytes=0: every batch's fetch is real regeneration, so the S3
+    # queue sees op-sized gaps (a warm cache would collapse S2 to
+    # microseconds and leave no bubble big enough for a strict drain)
+    pipe_er = _fresh(ds, maintenance="deferred", cache_bytes=0)
+    seq_er = _fresh(ds, maintenance="deferred", cache_bytes=0)
+    targets = _seed_offpath_restores(ds, pipe_er, batches)
+    for cid in targets:              # identical churn on the reference arm
+        chunk = int(seq_er.clusters[cid].ids[0])
+        seq_er.update(chunk, ds.get_chunks([chunk])[0])
+    assert len(pipe_er.maintenance) > 0
+    pipe = StagedPipeline(_engine(pipe_er, maintenance_owner="external"),
+                          ds.get_chunks)
+    responses, trace = pipe.run(batches)
+    # ops ran inside stage bubbles, and the final drain quiesced the rest
+    assert trace.maintenance_in_bubbles_s > 0
+    assert sum(s.maintenance_ops for s in trace.stages.values()) > 0
+    assert len(pipe_er.maintenance) == 0
+    for cid in targets:              # the bubble work really landed
+        assert pipe_er.clusters[cid].storage_fresh
+    # restores moving under the pipeline never change what is retrieved
+    seq_eng = _engine(seq_er)        # engine-owned post-decode drains
+    for b, resp_batch in zip(batches, responses):
+        seq = seq_eng.answer_batch(b.queries, b.query_embs, ds.get_chunks)
+        assert [r.chunk_ids for r in resp_batch] \
+            == [r.chunk_ids for r in seq]
+
+
+def test_ramp_gap_is_not_a_bubble(ds):
+    """Before the first decode there is nothing to hide under: a single
+    batch must leave the maintenance queue untouched (no pre-S4 drain),
+    even with fill_bubbles on."""
+    er = _fresh(ds, maintenance="deferred")
+    n = _seed_maintenance(ds, er, first_id=920_000)
+    assert len(er.maintenance) > 0
+    pipe = StagedPipeline(_engine(er, maintenance_owner="external"),
+                          ds.get_chunks, final_drain=False)
+    _, trace = pipe.run(_batches(ds, n_batches=1))
+    assert trace.maintenance_in_bubbles_s == 0
+    assert trace.stages["s2"].maintenance_ops == 0
+    assert trace.stages["s3"].maintenance_ops == 0
+    assert len(er.maintenance) > 0               # still queued, not drained
+
+
+# ----------------------------------------------------------------------
+# stale-plan S3 re-entry
+# ----------------------------------------------------------------------
+def test_stale_plan_reenters_s1(ds):
+    """A content mutation landing in the S2->S3 window forces the batch
+    back through S1 (fresh plan + fetch); results match serving the
+    post-mutation index directly."""
+    er = _fresh(ds)
+    ref = _fresh(ds)
+    eng = _engine(er)
+    embs = ds.query_embs[:4]
+
+    rng = np.random.default_rng(13)
+    mutated = {}
+
+    orig_fetch = eng.stage_fetch
+
+    def fetch_then_mutate(job, **kw):
+        orig_fetch(job, **kw)
+        if not mutated:
+            # in-place update of a chunk in a planned cluster: bumps the
+            # cluster's content generation after payloads were fetched
+            cid = next(iter(job.state.plan.owner))
+            chunk_id = int(er.clusters[cid].ids[0])
+            emb = ds.embedder.table[chunk_id] \
+                + 0.02 * rng.standard_normal(DIM)
+            emb = (emb / np.linalg.norm(emb)).astype(np.float32)
+            text = f"doc-{chunk_id} rev tok tok tok"
+            ds.add_chunk(chunk_id, text, emb)
+            mutated["id"] = chunk_id
+            mutated["text"] = text
+            er.update(chunk_id, text)
+        return job
+
+    eng.stage_fetch = fetch_then_mutate
+    pipe = StagedPipeline(eng, ds.get_chunks)
+    responses, trace = pipe.run([PipelineBatch(
+        queries=[f"q{i}" for i in range(4)], query_embs=embs)])
+    assert trace.replans == 1
+    assert responses[0][0].chunk_ids is not None
+    # reference: same mutation applied BEFORE serving, sequential path
+    ref.update(mutated["id"], mutated["text"])
+    seq = _engine(ref).answer_batch(
+        [f"q{i}" for i in range(4)], embs, ds.get_chunks)
+    assert [r.chunk_ids for r in responses[0]] \
+        == [r.chunk_ids for r in seq]
+
+
+def test_storage_tier_flip_does_not_replan(ds):
+    """A restore/drop between fetch and score bumps ``generation`` but not
+    ``content_generation`` — payloads in hand still row-align, so S3 must
+    NOT bounce the batch back to S1."""
+    er = _fresh(ds)
+    plan = er.plan_batch(ds.query_embs[:4], NPROBE)
+    cid = next(iter(plan.owner))
+    er._restore_cluster(cid)                     # tier flip only
+    assert not plan.fresh(cid, er.clusters[cid])  # fetch-time guard trips
+    assert er.resolver.stale_cids(plan) == []    # ...but S3 does not
+
+
+# ----------------------------------------------------------------------
+# queue-wait deadline propagation (satellite: degrade, don't silently miss)
+# ----------------------------------------------------------------------
+def test_queue_wait_degrades_instead_of_silently_missing(ds):
+    slo = 2.0
+    policy = DegradationPolicy()
+
+    def run(n_batches):
+        er = _fresh(ds, cache_bytes=0)   # regen-dominated: real S2 wait
+        batches = _batches(ds, n_batches=n_batches)
+        batches[-1].slos = [slo] * len(batches[-1].queries)
+        batches[-1].policy = policy
+        pipe = StagedPipeline(_engine(er), ds.get_chunks)
+        responses, _ = pipe.run(batches)
+        return responses[-1]
+
+    alone = run(n_batches=1)
+    assert all(r.outcome == "ok" for r in alone)  # the SLO is generous...
+    behind = run(n_batches=4)
+    # ...but behind three batches the S2 queue wait eats the budget: the
+    # ladder sheds work (outcome "degraded") instead of serving the full
+    # plan late with outcome still reading "ok" (the silent miss)
+    assert all(r.outcome != "ok" for r in behind)
+    assert any(r.outcome == "degraded" for r in behind)
+    assert sum(r.retrieval.retrieval_s for r in behind) \
+        < sum(a.retrieval.retrieval_s for a in alone)
+
+
+def test_run_pipelined_stamps_requests_and_trace(ds):
+    er = _fresh(ds)
+    sched = RequestScheduler()
+    for i in range(6):
+        sched.submit(0.05 * i, query=f"q{i}", query_emb=ds.query_embs[i],
+                     slo_s=30.0)
+    pipe = StagedPipeline(_engine(er), ds.get_chunks)
+    done = sched.run_pipelined(pipe, batch_size=3)
+    assert len(done) == 6
+    assert sched.pipeline_trace is not None
+    assert sched.pipeline_trace.n_batches == 2
+    assert len(sched.pipeline_responses) == 6
+    for r in done:
+        assert r.finish_s > r.start_s >= 0.0
+        assert r.outcome == "met"
+    # second batch decodes after the first entered decode
+    assert done[3].start_s > done[0].start_s
+
+
+# ----------------------------------------------------------------------
+# drain ownership
+# ----------------------------------------------------------------------
+def test_external_owner_engine_never_drains(ds):
+    er = _fresh(ds, maintenance="deferred")
+    _seed_maintenance(ds, er, first_id=930_000)
+    depth = len(er.maintenance)
+    assert depth > 0
+    eng = _engine(er, maintenance_owner="external")
+    out = eng.answer_batch(["q0", "q1"], ds.query_embs[:2], ds.get_chunks)
+    assert len(er.maintenance) == depth          # untouched: not the owner
+    assert out[0].maintenance_s == 0.0
+
+
+def test_pipeline_trace_as_dict_schema(ds):
+    er = _fresh(ds)
+    pipe = StagedPipeline(_engine(er), ds.get_chunks)
+    _, trace = pipe.run(_batches(ds, n_batches=2))
+    d = trace.as_dict()
+    for key in ("n_batches", "n_queries", "makespan_s", "replans",
+                "final_drain_s", "retrieval_busy_s", "decode_busy_s",
+                "hidden_retrieval_s", "hidden_retrieval_fraction",
+                "bubble_fraction", "maintenance_in_bubbles_s", "stages"):
+        assert key in d, key
+    assert set(d["stages"]) == {"s1", "s2", "s3", "s4"}
+    for cell in d["stages"].values():
+        for key in ("busy_s", "n_fired", "maintenance_s",
+                    "maintenance_ops", "max_queue_depth"):
+            assert key in cell, key
+    assert 0.0 <= d["hidden_retrieval_fraction"] <= 1.0
+    assert d["hidden_retrieval_fraction"] + d["bubble_fraction"] \
+        == pytest.approx(1.0)
