@@ -7,12 +7,16 @@
 # that fails on any unhandled exception, unaccounted fault, or recall
 # loss at the 10%-fault arm; pass pipeline-smoke for a quick-scale staged
 # pipeline run that fails if pipelined throughput drops below sequential
-# or pipelined answers drift from the sequential path.
+# or pipelined answers drift from the sequential path; pass tenant-smoke
+# for a quick-scale multi-tenant run that fails if the shared substrate is
+# slower than per-tenant silos or multi-tenancy perturbs single-tenant
+# results bitwise.
 #   scripts/ci.sh                 -> pytest -m "not slow"
 #   scripts/ci.sh --full          -> full suite
 #   scripts/ci.sh bench-smoke     -> quick benchmarks + BENCH_*.json key check
 #   scripts/ci.sh chaos-smoke     -> quick fault-tolerance bench + schema check
 #   scripts/ci.sh pipeline-smoke  -> quick pipeline-throughput bench + checks
+#   scripts/ci.sh tenant-smoke    -> quick multi-tenant bench + schema check
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -181,10 +185,48 @@ print(f"pipeline-smoke OK: {p['qps_ratio']:.2f}x QPS, "
       f"{p['hidden_retrieval_fraction']:.0%} retrieval hidden, "
       f"ids identical")
 PY
+elif [[ "${1:-}" == "tenant-smoke" ]]; then
+    out="$(mktemp -d)"
+    trap 'rm -rf "$out"' EXIT
+    python -m benchmarks.multi_tenant --quick \
+        --out "$out/BENCH_multi_tenant.json"
+    python - "$out" <<'PY'
+import json, os, sys
+
+m = json.load(open(os.path.join(sys.argv[1], "BENCH_multi_tenant.json")))
+for key in ("n_tenants", "n_records_per_tenant", "nlist", "dim", "k",
+            "nprobe", "batch", "n_requests", "zipf_a", "cache_total_bytes",
+            "tenant_request_counts", "shared", "silo", "qps_ratio",
+            "ids_identical", "single_tenant_bitwise", "noisy_neighbor",
+            "criteria"):
+    assert key in m, f"BENCH_multi_tenant.json missing key: {key}"
+for arm in ("shared", "silo"):
+    cell = m[arm]
+    for key in ("wall_s", "qps", "cache_hit_rate"):
+        assert key in cell, f"arm {arm} missing key: {key}"
+for arm in ("admission_off", "admission_on"):
+    cell = m["noisy_neighbor"][arm]
+    for t in ("big", "small"):
+        for key in ("n", "n_served", "n_rejected", "p50_ttft_s",
+                    "p99_ttft_s", "slo_hit_rate"):
+            assert key in cell[t], f"noisy_neighbor {arm}.{t} missing {key}"
+# hard floors at quick scale: sharing the substrate must never be a
+# pessimization and fusion must not perturb results; the full-scale
+# >=1.3x-at->=8-tenants target is recorded (and met) in the repo-root
+# BENCH_multi_tenant.json
+assert m["criteria"]["shared_not_slower"], \
+    f"shared substrate fell below per-tenant silos ({m['qps_ratio']:.2f}x)"
+assert m["criteria"]["ids_identical"], \
+    "fused multi-tenant chunk ids diverged from the per-tenant silos"
+assert m["criteria"]["single_tenant_bitwise"], \
+    "one-tenant router drifted from the standalone index"
+print(f"tenant-smoke OK: {m['qps_ratio']:.2f}x vs silos at "
+      f"{m['n_tenants']} tenants, ids identical, single-tenant bitwise")
+PY
 elif [[ -z "${1:-}" ]]; then
     python -m pytest -q -m "not slow"
 else
     echo "unknown lane: $1 (expected: no arg, --full, bench-smoke," \
-         "chaos-smoke, or pipeline-smoke)" >&2
+         "chaos-smoke, pipeline-smoke, or tenant-smoke)" >&2
     exit 2
 fi

@@ -7,7 +7,8 @@ Index zoo (Table 4):
                          (flags give the IVF+Gen / IVF+Gen+Load ablations)
 """
 from repro.core.cache_policy import (CostAwareLFUCache,  # noqa
-                                     MinLatencyThresholdController)
+                                     MinLatencyThresholdController,
+                                     TenantCacheView)
 from repro.core.costs import EdgeCostModel, LatencyBreakdown  # noqa
 from repro.core.edgerag import EdgeCluster, EdgeRAGIndex  # noqa
 from repro.core.faults import (CorruptPayloadError,  # noqa
@@ -15,7 +16,10 @@ from repro.core.faults import (CorruptPayloadError,  # noqa
 from repro.core.flat_index import FlatIndex  # noqa
 from repro.core.ivf_index import IVFIndex  # noqa
 from repro.core.kmeans import kmeans  # noqa
-from repro.core.maintenance import (MaintenanceOp, MaintenanceReport,  # noqa
+from repro.core.maintenance import (FairShareMaintenance,  # noqa
+                                    MaintenanceOp, MaintenanceReport,
                                     MaintenanceScheduler)
 from repro.core.resolver import ClusterResolver, ResolutionPlan  # noqa
-from repro.core.storage import StorageBackend  # noqa
+from repro.core.storage import StorageBackend, TenantStorageView  # noqa
+from repro.core.tenant import (MultiTenantSearchState,  # noqa
+                               TenantRouter)

@@ -173,6 +173,79 @@ class BatchSearchState:
     def nq(self) -> int:
         return self.queries.shape[0]
 
+    @property
+    def centroid_total_s(self) -> float:
+        """Total centroid-search edge seconds of this batch's S1 — ONE
+        fused launch for a plain batch (the multi-tenant state overrides
+        with one launch per tenant)."""
+        return self.lats[0].centroid_search_s if self.lats else 0.0
+
+    def shrink_deadlines(self, extra_wait_s: float):
+        """Tighten every remaining per-query deadline by queue seconds that
+        accrued after S1 (the serving layer's queue-wait adjustment)."""
+        plan = self.plan
+        if extra_wait_s > 0.0 and plan.deadlines is not None:
+            plan.deadlines = [None if d is None else max(0.0, d - extra_wait_s)
+                              for d in plan.deadlines]
+
+
+def slab_score_topk(slab, queries: np.ndarray, k: int,
+                    probed_per_q: Sequence[Sequence],
+                    *, mesh=None, shard_axis: str = "data"
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The S3 scoring core: ONE ragged multi-query top-k launch per slab
+    segment (at most three: fp32/fp16/int8), segments merged per query
+    under the virt tie-break.  Shared verbatim by ``search_finish`` and the
+    multi-tenant router's fused cross-tenant scoring — each (query, row)
+    pair's result depends only on that query's member rows (the virt mask
+    excludes everything else), so fusing several tenants' clusters into one
+    slab cannot perturb any query's (ids, scores).  Returns
+    ``(out_ids (Q,k), out_vals (Q,k), n_valid (Q,))``.
+    """
+    nq = queries.shape[0]
+    out_ids = np.full((nq, k), -1, np.int64)
+    out_vals = np.full((nq, k), -np.inf, np.float32)
+    virts, n_valid, n_valid_seg = slab.query_layout(probed_per_q)
+    lane = np.arange(k)[None, :]
+    cand_vals, cand_virt, cand_ids = [], [], []
+    for seg in slab.segments:
+        if seg.rows == 0:
+            continue
+        virt = virts[seg.kind]
+        if mesh is not None and seg.rows >= k:
+            from repro.core.sharded_retrieval import sharded_slab_topk
+            vals, rows = sharded_slab_topk(
+                seg.emb, queries, virt, k, mesh,
+                shard_axis, scales=seg.scales)
+        else:
+            vals, rows = slab_topk(seg.emb, queries, virt, k,
+                                   scales=seg.scales)
+        vals, rows = np.asarray(vals), np.asarray(rows)
+        # mask the padding lanes BEFORE the id gather and insist
+        # every remaining row is in-range — the old path's np.clip
+        # silently mapped any out-of-range index to the last id
+        valid = lane < n_valid_seg[seg.kind][:, None]    # (Q, k)
+        assert ((rows[valid] >= 0)
+                & (rows[valid] < seg.rows)).all(), \
+            "slab top-k returned out-of-range rows"
+        rows = np.where(valid, rows, 0)
+        cand_ids.append(np.where(valid, seg.ids[rows], -1))
+        cand_vals.append(np.where(valid, vals, -np.inf))
+        cand_virt.append(np.where(
+            valid, virt[np.arange(nq)[:, None], rows],
+            np.int32(NOT_PROBED)))
+    if len(cand_vals) == 1:            # one representation (fp32 path)
+        out_vals[:, :] = cand_vals[0]
+        out_ids[:, :] = cand_ids[0]
+    elif cand_vals:                    # merge segments per query under
+        cv = np.concatenate(cand_vals, axis=1)   # the same total
+        ct = np.concatenate(cand_virt, axis=1)   # order the kernel
+        ci = np.concatenate(cand_ids, axis=1)    # selected by
+        order = np.lexsort((ct, -cv), axis=1)[:, :k]
+        out_vals[:, :] = np.take_along_axis(cv, order, axis=1)
+        out_ids[:, :] = np.take_along_axis(ci, order, axis=1)
+    return out_ids, out_vals, n_valid
+
 
 class EdgeRAGIndex:
     """Two-level pruned IVF with selective storage + adaptive caching."""
@@ -189,7 +262,8 @@ class EdgeRAGIndex:
                  split_max_chars: int = 200_000,
                  merge_min_size: int = 2,
                  maintenance: str = "sync",
-                 maintenance_budget_s: Optional[float] = None):
+                 maintenance_budget_s: Optional[float] = None,
+                 storage=None, cache=None):
         assert maintenance in ("sync", "deferred"), maintenance
         self.dim = dim
         self.embed_fn = embed_fn
@@ -197,12 +271,18 @@ class EdgeRAGIndex:
         self.cost = cost_model or EdgeCostModel()
         self.slo_s = slo_s
         self.store_heavy = store_heavy
-        if cache_bytes is None:
-            cache_bytes = int(0.07 * self.cost.device_memory_bytes)  # §6.3.4
-        self.cache = CostAwareLFUCache(cache_bytes)
+        # ``storage`` / ``cache`` inject SHARED substrates (a TenantRouter's
+        # TenantStorageView / TenantCacheView); None keeps the historical
+        # owned-singleton behavior bit-for-bit
+        if cache is not None:
+            self.cache = cache
+        else:
+            if cache_bytes is None:
+                cache_bytes = int(0.07 * self.cost.device_memory_bytes)  # §6.3.4
+            self.cache = CostAwareLFUCache(cache_bytes)
         self.threshold = MinLatencyThresholdController()
-        self.storage = StorageBackend(storage_mode, root=storage_root,
-                                      codec=storage_codec)
+        self.storage = storage if storage is not None else StorageBackend(
+            storage_mode, root=storage_root, codec=storage_codec)
         self.resolver = ClusterResolver(self)
         self.centroids: Optional[np.ndarray] = None
         self.clusters: List[EdgeCluster] = []
@@ -231,8 +311,9 @@ class EdgeRAGIndex:
         # from the old latency distribution), and the char table
         self.storage.clear()
         self.maintenance.clear()        # queued ops describe the old corpus
-        self.cache = CostAwareLFUCache(self.cache.capacity_bytes,
-                                       self.cache.decay_factor)
+        # owned cache: a new empty instance (identical to the old
+        # re-construction); shared view: clears only this tenant's entries
+        self.cache = self.cache.fresh()
         self.threshold = MinLatencyThresholdController(
             self.threshold.step_s, self.threshold.alpha)
         self._chunk_chars = {int(i): len(t)
@@ -249,10 +330,12 @@ class EdgeRAGIndex:
             for i in cl.ids:
                 self._chunk_cluster[int(i)] = len(self.clusters)
             # ---- Algorithm 1: Selective Index Storage ----
-            if self.store_heavy and cl.gen_latency_est > self.slo_s:
-                self.storage.put(len(self.clusters),
-                                 embeddings[sel])          # persist heavy tail
-                cl.stored = True
+            # (a shared-budget refusal — put returns 0 — leaves the
+            # cluster on the regeneration path)
+            if (self.store_heavy and cl.gen_latency_est > self.slo_s
+                    and self.storage.put(len(self.clusters),
+                                         embeddings[sel]) > 0):
+                cl.stored = True                           # heavy tail persisted
                 cl.stored_generation = cl.generation
             self.clusters.append(cl)
         # second-level embeddings are now PRUNED (not retained in memory)
@@ -462,8 +545,6 @@ class EdgeRAGIndex:
                                           state.lats, state.missed)
         nq = state.nq
         probed_per_q = plan.probed_per_q
-        out_ids = np.full((nq, k), -1, np.int64)
-        out_vals = np.full((nq, k), -np.inf, np.float32)
         with WallTimer() as t:
             # Pack every unique cluster exactly once into the batch slab;
             # owners are charged the pack copy (and fused dequant for
@@ -481,52 +562,12 @@ class EdgeRAGIndex:
                             slab.nbytes(cid), resident_bytes=resident)
                         lats[qi].n_shared_hits += 1
             # Step 6: packed-slab scoring — ONE ragged multi-query launch
-            # per storage representation (at most three: fp32/fp16/int8)
-            # scores the whole batch; per (query, cluster) membership rides
-            # in the virt matrices, whose virtual per-query concat indices
-            # double as the tie-break key, so results are identical to the
-            # old per-query concat + top-k loop (bitwise on the fp32 tier).
-            # fp16/int8 segments dequantize INSIDE the kernel; no fp32 copy
-            # of quantized storage is materialized.
-            virts, n_valid, n_valid_seg = slab.query_layout(probed_per_q)
-            lane = np.arange(k)[None, :]
-            cand_vals, cand_virt, cand_ids = [], [], []
-            for seg in slab.segments:
-                if seg.rows == 0:
-                    continue
-                virt = virts[seg.kind]
-                if state.mesh is not None and seg.rows >= k:
-                    from repro.core.sharded_retrieval import sharded_slab_topk
-                    vals, rows = sharded_slab_topk(
-                        seg.emb, queries, virt, k, state.mesh,
-                        state.shard_axis, scales=seg.scales)
-                else:
-                    vals, rows = slab_topk(seg.emb, queries, virt, k,
-                                           scales=seg.scales)
-                vals, rows = np.asarray(vals), np.asarray(rows)
-                # mask the padding lanes BEFORE the id gather and insist
-                # every remaining row is in-range — the old path's np.clip
-                # silently mapped any out-of-range index to the last id
-                valid = lane < n_valid_seg[seg.kind][:, None]    # (Q, k)
-                assert ((rows[valid] >= 0)
-                        & (rows[valid] < seg.rows)).all(), \
-                    "slab top-k returned out-of-range rows"
-                rows = np.where(valid, rows, 0)
-                cand_ids.append(np.where(valid, seg.ids[rows], -1))
-                cand_vals.append(np.where(valid, vals, -np.inf))
-                cand_virt.append(np.where(
-                    valid, virt[np.arange(nq)[:, None], rows],
-                    np.int32(NOT_PROBED)))
-            if len(cand_vals) == 1:        # one representation (fp32 path)
-                out_vals[:, :] = cand_vals[0]
-                out_ids[:, :] = cand_ids[0]
-            elif cand_vals:                # merge segments per query under
-                cv = np.concatenate(cand_vals, axis=1)   # the same total
-                ct = np.concatenate(cand_virt, axis=1)   # order the kernel
-                ci = np.concatenate(cand_ids, axis=1)    # selected by
-                order = np.lexsort((ct, -cv), axis=1)[:, :k]
-                out_vals[:, :] = np.take_along_axis(cv, order, axis=1)
-                out_ids[:, :] = np.take_along_axis(ci, order, axis=1)
+            # per storage representation (slab_score_topk; per-query results
+            # identical to the old per-query concat + top-k loop, bitwise on
+            # the fp32 tier)
+            out_ids, out_vals, n_valid = slab_score_topk(
+                slab, queries, k, probed_per_q,
+                mesh=state.mesh, shard_axis=state.shard_axis)
             for qi in range(nq):
                 if n_valid[qi]:
                     lats[qi].l2_search_s = self.cost.search_latency(
@@ -694,9 +735,12 @@ class EdgeRAGIndex:
         embs = self._regen_embeddings(cid)
         cl = self.clusters[cid]
         cl.generation += 1              # storage state is cluster state
-        self.storage.put(cid, embs)
-        cl.stored = True
-        cl.stored_generation = cl.generation
+        if self.storage.put(cid, embs) > 0:
+            cl.stored = True
+            cl.stored_generation = cl.generation
+        else:                           # shared storage budget refused
+            cl.stored = False
+            cl.stored_generation = -1
 
     def _drop_stored(self, cid: int):
         """The inverse of a restore: the cluster became cheap to regenerate,
@@ -769,8 +813,8 @@ class EdgeRAGIndex:
                                 gen_latency_est=self.cost.embed_latency(chars),
                                 generation=next_gen,
                                 content_generation=cl.content_generation + 1)
-            if self.store_heavy and newcl.gen_latency_est > self.slo_s:
-                self.storage.put(slot, sub)
+            if (self.store_heavy and newcl.gen_latency_est > self.slo_s
+                    and self.storage.put(slot, sub) > 0):
                 newcl.stored = True
                 newcl.stored_generation = newcl.generation
             if slot == cid:

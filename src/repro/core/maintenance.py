@@ -217,7 +217,8 @@ class MaintenanceScheduler:
             ix._merge_cluster(cid)
 
     def drain(self, budget_s: Optional[float] = None,
-              strict: bool = False) -> MaintenanceReport:
+              strict: bool = False,
+              max_ops: Optional[int] = None) -> MaintenanceReport:
         """Run queued ops until the queue is empty or the budget is spent.
 
         ``budget_s`` overrides ``budget_s_per_step``; None on both means run
@@ -230,12 +231,18 @@ class MaintenanceScheduler:
         unaffordable op).  Strict drains model maintenance that must fit an
         idle window exactly (e.g. the gap before the next known arrival);
         oversized ops wait for a deeper idle period or an unbudgeted drain.
+
+        ``max_ops`` caps EXECUTED ops this call (skips are still free):
+        :class:`FairShareMaintenance` steps tenants one op at a time with
+        ``max_ops=1``.
         """
         if budget_s is None:
             budget_s = self.budget_s_per_step
         report = MaintenanceReport()
         failed_this_drain: set = set()
         while self._queue:
+            if max_ops is not None and len(report.executed) >= max_ops:
+                break
             key, op = next(iter(self._queue.items()))
             if key in failed_this_drain:
                 break   # only ops that already raised this drain remain
@@ -299,3 +306,102 @@ class MaintenanceScheduler:
             "quarantined": len(self.quarantined),
             "total_edge_s": self.total_edge_s,
         }
+
+
+class FairShareMaintenance:
+    """Round-robin multiplexer over per-tenant :class:`MaintenanceScheduler`s.
+
+    The shared device has ONE maintenance budget per idle window; with a
+    plain FIFO a churn-heavy tenant would starve everyone else's restores.
+    This drains tenants in round-robin order, one executed op per turn
+    (``max_ops=1``), with the rotation cursor persisting ACROSS drains so a
+    window that only fits one op still rotates fairly over time.  The
+    effective queue is keyed ``(tenant, kind, cid)``: each tenant's
+    scheduler keeps its own ``(kind, cid)`` keys and this class supplies
+    the tenant axis — report entries come back as
+    ``(kind, (tenant, cid))``.
+
+    Interface-compatible with a single :class:`MaintenanceScheduler` where
+    the serving layer is concerned (``__len__`` / ``drain`` / ``clear`` /
+    ``pending`` / ``total_edge_s`` / ``stats``), so
+    :class:`~repro.serving.engine.RAGEngine` and
+    :class:`~repro.serving.pipeline.StagedPipeline` drain a router's
+    maintenance exactly as they drain an index's.
+    """
+
+    def __init__(self):
+        self._scheds: "OrderedDict[str, MaintenanceScheduler]" = OrderedDict()
+        self._rr = 0                    # rotation cursor, persists
+        self.total_edge_s = 0.0
+        self.n_executed = 0
+        self.per_tenant_edge_s: Dict[str, float] = {}
+
+    def register(self, tenant: str, sched: MaintenanceScheduler):
+        assert tenant not in self._scheds, f"tenant {tenant!r} registered"
+        self._scheds[tenant] = sched
+        self.per_tenant_edge_s.setdefault(tenant, 0.0)
+
+    def __len__(self) -> int:
+        return sum(len(s) for s in self._scheds.values())
+
+    @property
+    def pending(self) -> List[Tuple[str, MaintenanceOp]]:
+        return [(t, op) for t, s in self._scheds.items()
+                for op in s.pending]
+
+    @property
+    def quarantined(self) -> Dict[Tuple[str, str, int], str]:
+        return {(t, k, c): err for t, s in self._scheds.items()
+                for (k, c), err in s.quarantined.items()}
+
+    def clear(self):
+        for s in self._scheds.values():
+            s.clear()
+
+    def drain(self, budget_s: Optional[float] = None,
+              strict: bool = False) -> MaintenanceReport:
+        """One fair-share pass: rotate tenants, one executed op per turn,
+        until every queue is empty / unaffordable or the budget is spent.
+        Non-strict drains keep the single-scheduler guarantee — the FIRST
+        op may overrun the budget so one oversized op cannot stall the
+        whole substrate — after which the budget binds strictly."""
+        report = MaintenanceReport()
+        scheds = list(self._scheds.items())
+        if not scheds:
+            return report
+        n = len(scheds)
+        stalled = 0             # consecutive turns with no queue progress
+        while stalled < n:
+            # budget check precedes taking the turn: a tenant skipped only
+            # because the budget ran out keeps its slot for the next drain
+            remaining = None if budget_s is None else budget_s - report.edge_s
+            if (remaining is not None and remaining <= 0
+                    and (strict or report.executed)):
+                break
+            tenant, sched = scheds[self._rr % n]
+            self._rr += 1
+            if not len(sched):
+                stalled += 1
+                continue
+            rep = sched.drain(remaining,
+                              strict=strict or bool(report.executed),
+                              max_ops=1)
+            report.executed += [(k, (tenant, c)) for k, c in rep.executed]
+            report.skipped += [(k, (tenant, c)) for k, c in rep.skipped]
+            report.failed += [(k, (tenant, c)) for k, c in rep.failed]
+            report.quarantined += [(k, (tenant, c))
+                                   for k, c in rep.quarantined]
+            report.edge_s += rep.edge_s
+            self.per_tenant_edge_s[tenant] = (
+                self.per_tenant_edge_s.get(tenant, 0.0) + rep.edge_s)
+            stalled = 0 if (rep.executed or rep.skipped) else stalled + 1
+        report.remaining = len(self)
+        self.total_edge_s += report.edge_s
+        self.n_executed += report.n_executed
+        return report
+
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        out = {t: s.stats() for t, s in self._scheds.items()}
+        for t in out:
+            out[t]["fair_share_edge_s"] = self.per_tenant_edge_s.get(t, 0.0)
+        return out

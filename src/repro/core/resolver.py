@@ -553,9 +553,14 @@ class ClusterResolver:
                 if (cl.stored and cid in heal
                         and (not cl.storage_fresh or cid not in ix.storage)):
                     # self-heal the vanished/stale storage copy so later
-                    # batches load instead of regenerating forever
-                    ix.storage.put(cid, sub.copy())
-                    cl.stored_generation = cl.generation
+                    # batches load instead of regenerating forever; a
+                    # budget-refused put (returns 0) leaves the cluster on
+                    # the regen path instead
+                    if ix.storage.put(cid, sub.copy()) > 0:
+                        cl.stored_generation = cl.generation
+                    else:
+                        cl.stored = False
+                        cl.stored_generation = -1
                 gen_s = ix.cost.embed_latency(chars)
                 qi = plan.owner[cid]
                 lats[qi].l2_generate_s += gen_s

@@ -53,15 +53,39 @@ the same directory and atomically ``os.replace``d over the key's path, so
 an interrupted write can never leave a torn payload behind (and a torn
 file from an older writer is caught by the checksum / container parse and
 degrades like any corrupt blob).
+
+MULTI-TENANCY: keys may be plain ints (single-tenant, the historical
+contract — paths and accounting unchanged) or ``(tenant, cid)`` tuples.
+Tuple keys land in per-tenant ``tenant_<name>/`` subdirectories on disk and
+are first-class dict keys in memory mode; ``keys()`` enumerates both forms.
+:class:`TenantStorageView` gives one tenant an int-keyed facade over a
+shared backend so :class:`~repro.core.edgerag.EdgeRAGIndex` needs no
+changes to run on shared storage.  ``budget_bytes`` imposes a SHARED byte
+budget across every key (all tenants): a ``put`` that would exceed it
+refuses — stores nothing, returns 0, bumps ``io_stats["put_rejected"]`` —
+and the caller keeps the cluster on the regeneration path.  The budget is
+an in-process quota over bytes this instance knows about (its own writes
+plus lazily discovered pre-existing blobs), not an fsck of the root.
+
+ROOT COLLISION GUARD: memory mode has always refused to touch a filesystem
+root at all (``_path`` raises).  Disk mode extends that safety to WRITERS:
+the first ``put`` claims the ``(root, namespace)`` slot in a process-wide
+registry, and a second live instance writing to the same slot raises
+``RuntimeError`` instead of silently interleaving blobs with the first.
+Reopening a root read-only (metadata/get) never claims, and a dead writer's
+claim expires with it.  Pass distinct ``namespace=`` strings (each gets its
+own subdirectory of ``root``) to intentionally co-locate several stores
+under one root.
 """
 from __future__ import annotations
 
 import os
 import re
 import tempfile
+import weakref
 import zipfile
 import zlib
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -71,7 +95,12 @@ from repro.core.faults import (CorruptPayloadError, FaultInjector,
 CODECS = ("fp32", "fp16", "int8")
 
 _CLUSTER_FILE = re.compile(r"^cluster_(\d+)\.npz$")
+_TENANT_DIR = re.compile(r"^tenant_([A-Za-z0-9._-]+)$")
+_NAMESPACE_RE = re.compile(r"^[A-Za-z0-9._-]*$")
 _CHECKSUM_KEY = "crc"
+
+#: blob key: a bare cluster id, or ``(tenant, cid)`` on a shared backend
+StorageKey = Union[int, Tuple[str, int]]
 
 
 def payload_checksum(payload: Dict[str, np.ndarray]) -> int:
@@ -88,19 +117,31 @@ def payload_checksum(payload: Dict[str, np.ndarray]) -> int:
 class StorageBackend:
     """Keyed blob store for per-cluster embedding matrices."""
 
+    # live disk WRITERS by (realpath(root), namespace); weakrefs so a
+    # garbage-collected writer releases its claim (module docstring)
+    _disk_claims: Dict[Tuple[str, str], "weakref.ref[StorageBackend]"] = {}
+
     def __init__(self, mode: str = "memory", root: Optional[str] = None,
                  codec: str = "fp32", *, retry_limit: int = 3,
-                 backoff_base_s: float = 0.002):
+                 backoff_base_s: float = 0.002, namespace: str = "",
+                 budget_bytes: Optional[int] = None):
         assert mode in ("memory", "disk")
         assert codec in CODECS, f"codec must be one of {CODECS}, got {codec}"
+        assert _NAMESPACE_RE.match(namespace), \
+            f"namespace must match [A-Za-z0-9._-]*, got {namespace!r}"
         self.mode = mode
         self.codec = codec
-        self._mem: Dict[int, Dict[str, np.ndarray]] = {}
-        self._nbytes: Dict[int, int] = {}       # encoded payload bytes
+        self.namespace = namespace
+        self.budget_bytes = budget_bytes
+        self._mem: Dict[StorageKey, Dict[str, np.ndarray]] = {}
+        self._nbytes: Dict[StorageKey, int] = {}    # encoded payload bytes
         self.root: Optional[str] = None
+        self._base: Optional[str] = None            # root[/namespace]
         if mode == "disk":
             self.root = root or tempfile.mkdtemp(prefix="edgerag_store_")
-            os.makedirs(self.root, exist_ok=True)
+            self._base = (os.path.join(self.root, namespace) if namespace
+                          else self.root)
+            os.makedirs(self._base, exist_ok=True)
         # failure model (module docstring): injector hook + retry policy
         self.faults: Optional[FaultInjector] = None
         self.retry_limit = retry_limit
@@ -108,7 +149,7 @@ class StorageBackend:
         self.io_stats: Dict[str, float] = {
             "reads": 0, "verified": 0, "failed_attempts": 0, "retries": 0,
             "exhausted": 0, "corrupt_dropped": 0, "backoff_s": 0.0,
-            "stall_s": 0.0}
+            "stall_s": 0.0, "put_rejected": 0}
 
     # ---- codec ----------------------------------------------------------
     def _encode(self, emb: np.ndarray) -> Dict[str, np.ndarray]:
@@ -137,11 +178,31 @@ class StorageBackend:
         return len(payload["q"] if "q" in payload else payload["emb"])
 
     # ---- filesystem (disk mode only) ------------------------------------
-    def _path(self, key: int) -> str:
+    def _path(self, key: StorageKey) -> str:
         if self.root is None:
             raise RuntimeError(
                 "memory-mode StorageBackend has no filesystem root")
-        return os.path.join(self.root, f"cluster_{key}.npz")
+        if isinstance(key, tuple):
+            tenant, cid = key
+            return os.path.join(self._base, f"tenant_{tenant}",
+                                f"cluster_{cid}.npz")
+        return os.path.join(self._base, f"cluster_{key}.npz")
+
+    def _claim_root(self):
+        """First write claims the ``(root, namespace)`` slot; a second LIVE
+        writer on the same slot is a collision, not a merge (module
+        docstring).  Read-only reopens never claim."""
+        slot = (os.path.realpath(self.root), self.namespace)
+        ref = StorageBackend._disk_claims.get(slot)
+        owner = ref() if ref is not None else None
+        if owner is not None and owner is not self:
+            raise RuntimeError(
+                f"storage root collision: another live StorageBackend is "
+                f"already writing to root={self.root!r} "
+                f"namespace={self.namespace!r}; their blobs would silently "
+                f"overwrite each other — give each writer its own "
+                f"namespace= (or root)")
+        StorageBackend._disk_claims[slot] = weakref.ref(self)
 
     def _load(self, key: int) -> Optional[Dict[str, np.ndarray]]:
         """Raw physical read (checksum member included).  A present-but-
@@ -222,19 +283,28 @@ class StorageBackend:
         return None
 
     # ---- public API ------------------------------------------------------
-    def put(self, key: int, embeddings: np.ndarray) -> int:
+    def put(self, key: StorageKey, embeddings: np.ndarray) -> int:
         """Returns encoded (stored) byte size (checksum excluded — the CRC
-        is metadata, not payload).  Disk mode writes are atomic: temp file
-        + ``os.replace``, so a crash mid-write never tears the blob."""
+        is metadata, not payload), or 0 if the shared ``budget_bytes``
+        refused the write (nothing stored; the caller keeps the cluster on
+        the regen path).  Disk mode writes are atomic: temp file +
+        ``os.replace``, so a crash mid-write never tears the blob."""
         payload = self._encode(embeddings)
-        self._nbytes[key] = sum(a.nbytes for a in payload.values())
+        nbytes = sum(a.nbytes for a in payload.values())
+        if self.budget_bytes is not None:
+            used = sum(self._nbytes.values()) - self._nbytes.get(key, 0)
+            if used + nbytes > self.budget_bytes:
+                self.io_stats["put_rejected"] += 1
+                return 0
         stored = dict(payload)
         stored[_CHECKSUM_KEY] = np.array([payload_checksum(payload)],
                                          np.uint32)
         if self.mode == "memory":
             self._mem[key] = stored
         else:
+            self._claim_root()
             path = self._path(key)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
             tmp = path + ".tmp"
             try:
                 with open(tmp, "wb") as f:
@@ -244,6 +314,7 @@ class StorageBackend:
                 if os.path.exists(tmp):
                     os.remove(tmp)
                 raise
+        self._nbytes[key] = nbytes
         return self._nbytes[key]
 
     def get(self, key: int) -> np.ndarray:
@@ -297,17 +368,30 @@ class StorageBackend:
             self.delete(key)
         self._nbytes.clear()
 
-    def __contains__(self, key: int) -> bool:
+    def __contains__(self, key: StorageKey) -> bool:
         if self.mode == "memory":
             return key in self._mem
         return os.path.exists(self._path(key))
 
-    def keys(self) -> List[int]:
+    def keys(self) -> List[StorageKey]:
         if self.mode == "memory":
             return list(self._mem)
-        # foreign files in a user-supplied root are not ours to touch
-        return [int(m.group(1)) for m in
-                (_CLUSTER_FILE.match(f) for f in os.listdir(self.root)) if m]
+        # foreign files in a user-supplied root are not ours to touch:
+        # only cluster_<n>.npz blobs and tenant_<name>/ subdirectories
+        # of our base directory are enumerated
+        out: List[StorageKey] = [
+            int(m.group(1)) for m in
+            (_CLUSTER_FILE.match(f) for f in os.listdir(self._base)) if m]
+        for entry in os.listdir(self._base):
+            td = _TENANT_DIR.match(entry)
+            if not td or not os.path.isdir(os.path.join(self._base, entry)):
+                continue
+            tenant = td.group(1)
+            for f in os.listdir(os.path.join(self._base, entry)):
+                m = _CLUSTER_FILE.match(f)
+                if m:
+                    out.append((tenant, int(m.group(1))))
+        return out
 
     def stored_bytes(self, key: int) -> int:
         """Encoded payload bytes of one cluster (what a load streams)."""
@@ -346,3 +430,104 @@ class StorageBackend:
 
     def total_bytes(self) -> int:
         return sum(self.stored_bytes(k) for k in self.keys())
+
+    def tenant_bytes(self, tenant: str) -> int:
+        """Encoded bytes held under one tenant's ``(tenant, cid)`` keys."""
+        return sum(self.stored_bytes(k) for k in self.keys()
+                   if isinstance(k, tuple) and k[0] == tenant)
+
+
+class TenantStorageView:
+    """One tenant's int-keyed facade over a SHARED :class:`StorageBackend`.
+
+    Every cluster id is rewritten to ``(tenant, cid)`` before it reaches
+    the backend, so an :class:`~repro.core.edgerag.EdgeRAGIndex` holding a
+    view is oblivious to its neighbors while all tenants' blobs compete for
+    the backend's one ``budget_bytes`` quota.  ``keys`` / ``clear`` /
+    ``total_bytes`` are scoped to this tenant; ``io_stats`` and ``faults``
+    are the backend's (the device has one storage medium — faults and IO
+    accounting are physical, not per-tenant)."""
+
+    def __init__(self, backend: StorageBackend, tenant: str):
+        self.backend = backend
+        self.tenant = str(tenant)
+
+    def _k(self, cid: int) -> Tuple[str, int]:
+        return (self.tenant, int(cid))
+
+    # shared physical properties ------------------------------------------
+    @property
+    def mode(self) -> str:
+        return self.backend.mode
+
+    @property
+    def codec(self) -> str:
+        return self.backend.codec
+
+    @property
+    def root(self) -> Optional[str]:
+        return self.backend.root
+
+    @property
+    def io_stats(self) -> Dict[str, float]:
+        return self.backend.io_stats
+
+    @property
+    def faults(self) -> Optional[FaultInjector]:
+        return self.backend.faults
+
+    @faults.setter
+    def faults(self, injector: Optional[FaultInjector]):
+        self.backend.faults = injector
+
+    # key-mapped blob API --------------------------------------------------
+    def put(self, cid: int, embeddings: np.ndarray) -> int:
+        return self.backend.put(self._k(cid), embeddings)
+
+    def get(self, cid: int) -> np.ndarray:
+        try:
+            return self.backend.get(self._k(cid))
+        except KeyError:
+            raise KeyError(cid)
+
+    def get_many(self, cids: Sequence[int],
+                 outcomes: Optional[List[IOOutcome]] = None
+                 ) -> List[Optional[np.ndarray]]:
+        return self.backend.get_many([self._k(c) for c in cids], outcomes)
+
+    def get_many_raw(self, cids: Sequence[int],
+                     outcomes: Optional[List[IOOutcome]] = None
+                     ) -> List[Optional[Dict[str, np.ndarray]]]:
+        return self.backend.get_many_raw([self._k(c) for c in cids],
+                                         outcomes)
+
+    def delete(self, cid: int):
+        self.backend.delete(self._k(cid))
+
+    def __contains__(self, cid: int) -> bool:
+        return self._k(cid) in self.backend
+
+    def keys(self) -> List[int]:
+        return [k[1] for k in self.backend.keys()
+                if isinstance(k, tuple) and k[0] == self.tenant]
+
+    def clear(self):
+        """Drop THIS tenant's blobs only (its index rebuilds)."""
+        for cid in self.keys():
+            self.delete(cid)
+
+    def stored_bytes(self, cid: int) -> int:
+        try:
+            return self.backend.stored_bytes(self._k(cid))
+        except KeyError:
+            raise KeyError(cid)
+
+    def total_bytes(self) -> int:
+        return self.backend.tenant_bytes(self.tenant)
+
+    def decode(self, payload: Dict[str, np.ndarray]) -> np.ndarray:
+        return self.backend.decode(payload)
+
+    @staticmethod
+    def payload_rows(payload: Dict[str, np.ndarray]) -> int:
+        return StorageBackend.payload_rows(payload)

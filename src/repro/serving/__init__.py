@@ -1,6 +1,11 @@
 from repro.serving.engine import BatchJob, RAGEngine, RAGResponse  # noqa
-from repro.serving.scheduler import Request, RequestScheduler  # noqa
-from repro.serving.simulator import EdgeSimulator, simulate_ttft  # noqa
+from repro.serving.scheduler import (Request, RequestScheduler,  # noqa
+                                     TokenBucketAdmission)
+from repro.serving.simulator import (EdgeSimulator, TenantTrace,  # noqa
+                                     simulate_ttft, zipf_over_tenants)
 from repro.serving.batching import ContinuousBatcher  # noqa
 from repro.serving.pipeline import (PipelineBatch, PipelineTrace,  # noqa
                                     StagedPipeline)
+from repro.serving.metrics import (Counter, Gauge, Histogram,  # noqa
+                                   MetricsRegistry, collect_pipeline_trace,
+                                   collect_router, collect_scheduler)

@@ -85,10 +85,12 @@ class BatchJob:
     """
     queries: List[str]
     query_embs: np.ndarray
-    get_chunks: Callable[[Sequence[int]], List[str]]
+    get_chunks: Optional[Callable[[Sequence[int]], List[str]]]
     deadlines: Optional[List[Optional[float]]] = None
     policy: Optional[DegradationPolicy] = None
     prefetch: bool = False
+    tenants: Optional[List[str]] = None     # per-query tenant ids when the
+    #                                         engine fronts a TenantRouter
     # stage products:
     state: Any = None                       # BatchSearchState (S1 → S3)
     ids: Optional[np.ndarray] = None        # (Q, k) chunk ids (S3)
@@ -135,10 +137,12 @@ class RAGEngine:
         self.maintenance_owner = maintenance_owner
 
     def answer_batch(self, queries: Sequence[str], query_embs: np.ndarray,
-                     get_chunks: Callable[[Sequence[int]], List[str]],
+                     get_chunks: Optional[Callable[[Sequence[int]],
+                                                   List[str]]] = None,
                      *, batcher=None, prefetch: bool = False,
                      deadlines: Optional[Sequence[Optional[float]]] = None,
-                     policy: Optional[DegradationPolicy] = None
+                     policy: Optional[DegradationPolicy] = None,
+                     tenants: Optional[Sequence[str]] = None
                      ) -> List[RAGResponse]:
         """Batched serving path: one ``search_batch`` drives retrieval for
         the whole batch (cross-query cluster dedup + a single coalesced
@@ -162,12 +166,18 @@ class RAGEngine:
         ``search_batch``, which sheds work down the degradation ladder
         (core/faults.py) instead of blowing it.  Each response reports its
         ``outcome`` ("ok" / "degraded" / "missed") plus the shed counters.
+
+        ``tenants``: one tenant id per query (or a single id broadcast)
+        when ``index`` is a :class:`~repro.core.tenant.TenantRouter` —
+        retrieval fuses the mixed batch through the router's shared slab
+        engine and ``get_chunks`` may be omitted (contexts route to each
+        query's own tenant corpus).
         """
         if not len(queries):
             return []
         job = self.make_job(queries, query_embs, get_chunks,
                             deadlines=deadlines, policy=policy,
-                            prefetch=prefetch)
+                            prefetch=prefetch, tenants=tenants)
         self.stage_plan(job)
         self.stage_fetch(job)
         self.stage_score(job)
@@ -187,23 +197,36 @@ class RAGEngine:
     # the staged path: make_job + stage_plan/fetch/score/decode + finalize
     # ------------------------------------------------------------------
     def make_job(self, queries: Sequence[str], query_embs: np.ndarray,
-                 get_chunks: Callable[[Sequence[int]], List[str]],
+                 get_chunks: Optional[Callable[[Sequence[int]],
+                                               List[str]]] = None,
                  *, deadlines: Optional[Sequence[Optional[float]]] = None,
                  policy: Optional[DegradationPolicy] = None,
-                 prefetch: bool = False) -> BatchJob:
+                 prefetch: bool = False,
+                 tenants: Optional[Sequence[str]] = None) -> BatchJob:
         """Wrap one batch as a :class:`BatchJob` for the staged path."""
         query_embs = np.atleast_2d(np.asarray(query_embs, np.float32))
         if deadlines is not None:
             assert len(deadlines) == len(queries), \
                 f"{len(deadlines)} deadlines for {len(queries)} queries"
             policy = policy or DegradationPolicy()
+        if tenants is not None:
+            if isinstance(tenants, str):
+                tenants = [tenants] * len(queries)
+            tenants = [str(t) for t in tenants]
+            assert len(tenants) == len(queries), \
+                f"{len(tenants)} tenant ids for {len(queries)} queries"
+        else:
+            assert get_chunks is not None, \
+                "get_chunks is required without tenants"
         return BatchJob(queries=list(queries), query_embs=query_embs,
                         get_chunks=get_chunks,
                         deadlines=None if deadlines is None
                         else list(deadlines),
                         policy=policy,
                         prefetch=prefetch
-                        and hasattr(self.index, "plan_batch"))
+                        and (tenants is not None
+                             or hasattr(self.index, "plan_batch")),
+                        tenants=tenants)
 
     def stage_plan(self, job: BatchJob) -> BatchJob:
         """S1 — probe + plan: fused centroid top-k, tier planning, rung-1
@@ -220,21 +243,32 @@ class RAGEngine:
                 for d in job.deadlines]
             kw["deadlines"] = retrieval_deadlines
             kw["policy"] = job.policy
-        if job.prefetch:
-            kw["plan"] = self.index.plan_batch(
-                job.query_embs, self.nprobe, prefetch_storage=True,
-                deadlines=retrieval_deadlines, policy=job.policy,
-                query_chars=[len(q) for q in job.queries])
-            kw.pop("deadlines", None)    # the plan carries them already
-            kw.pop("policy", None)
-        job.state = self.index.search_begin(
-            job.query_embs, self.k, self.nprobe,
-            query_chars=[len(q) for q in job.queries], **kw)
+        if job.tenants is not None:
+            # TenantRouter path: the router plans per tenant (handling
+            # prefetch internally) and merges into one cross-tenant plan
+            job.state = self.index.search_begin(
+                job.query_embs, self.k, self.nprobe,
+                query_chars=[len(q) for q in job.queries],
+                tenants=job.tenants, deadlines=retrieval_deadlines,
+                policy=job.policy, prefetch=job.prefetch)
+        else:
+            if job.prefetch:
+                kw["plan"] = self.index.plan_batch(
+                    job.query_embs, self.nprobe, prefetch_storage=True,
+                    deadlines=retrieval_deadlines, policy=job.policy,
+                    query_chars=[len(q) for q in job.queries])
+                kw.pop("deadlines", None)    # the plan carries them already
+                kw.pop("policy", None)
+            job.state = self.index.search_begin(
+                job.query_embs, self.k, self.nprobe,
+                query_chars=[len(q) for q in job.queries], **kw)
         job.retrieval_wall += time.perf_counter() - t0
         lats = job.state.lats
+        # one fused centroid launch per index in the batch: one for a
+        # standalone index, one PER TENANT through a router
         job.stage_edge_s["s1"] = (
             sum(lat.embed_query_s for lat in lats)
-            + (lats[0].centroid_search_s if lats else 0.0))
+            + job.state.centroid_total_s)
         return job
 
     def stage_fetch(self, job: BatchJob, *,
@@ -247,11 +281,7 @@ class RAGEngine:
         queue wait, not just execution time.  Service time: the owner
         charges (each unique cluster is resolved exactly once)."""
         t0 = time.perf_counter()
-        plan = job.state.plan
-        if extra_wait_s > 0.0 and plan.deadlines is not None:
-            plan.deadlines = [None if d is None
-                              else max(0.0, d - extra_wait_s)
-                              for d in plan.deadlines]
+        job.state.shrink_deadlines(extra_wait_s)
         self.index.search_fetch(job.state)
         job.retrieval_wall += time.perf_counter() - t0
         job.stage_edge_s["s2"] = sum(lat.stage_s("fetch")
@@ -267,7 +297,11 @@ class RAGEngine:
         nq = job.nq
         job.id_lists = [[int(i) for i in job.ids[qi] if i >= 0]
                         for qi in range(nq)]
-        job.contexts = [job.get_chunks(idl) for idl in job.id_lists]
+        if job.tenants is not None:
+            job.contexts = [self.index.get_chunks(t, idl)
+                            for t, idl in zip(job.tenants, job.id_lists)]
+        else:
+            job.contexts = [job.get_chunks(idl) for idl in job.id_lists]
         job.prompts = [" ".join(ctx + [q])
                        for ctx, q in zip(job.contexts, job.queries)]
         job.prefill_edge = [
@@ -355,10 +389,12 @@ class RAGEngine:
         return responses
 
     def answer(self, query: str, query_emb: np.ndarray,
-               get_chunks: Callable[[Sequence[int]], List[str]],
+               get_chunks: Optional[Callable[[Sequence[int]],
+                                             List[str]]] = None,
                *, prefetch: bool = False,
                deadline_s: Optional[float] = None,
-               policy: Optional[DegradationPolicy] = None) -> RAGResponse:
+               policy: Optional[DegradationPolicy] = None,
+               tenant: Optional[str] = None) -> RAGResponse:
         """Single query — a batch of one through :meth:`answer_batch`
         (mirroring ``EdgeRAGIndex.search`` → ``search_batch``)."""
         query_embs = np.atleast_2d(np.asarray(query_emb, np.float32))
@@ -366,7 +402,8 @@ class RAGEngine:
         return self.answer_batch(
             [query], query_embs, get_chunks, prefetch=prefetch,
             deadlines=None if deadline_s is None else [deadline_s],
-            policy=policy)[0]
+            policy=policy,
+            tenants=None if tenant is None else [tenant])[0]
 
 
 class GeneratorModel:

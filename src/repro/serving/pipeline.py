@@ -90,6 +90,8 @@ class PipelineBatch:
     slos: Optional[List[Optional[float]]] = None   # per-query TTFT SLOs
     policy: Optional[DegradationPolicy] = None
     requests: Optional[List[object]] = None        # scheduler Requests
+    tenants: Optional[List[str]] = None            # per-query tenant ids
+    #                                      (engine fronting a TenantRouter)
 
 
 @dataclasses.dataclass
@@ -257,7 +259,8 @@ class StagedPipeline:
             _InFlight(batch=b,
                       job=eng.make_job(b.queries, b.query_embs,
                                        self.get_chunks,
-                                       deadlines=b.slos, policy=b.policy),
+                                       deadlines=b.slos, policy=b.policy,
+                                       tenants=b.tenants),
                       ready_at=b.arrival_s)
             for b in batches]
         stage_free = {s: 0.0 for s in STAGES}

@@ -4,12 +4,25 @@ EdgeRAG is a single-user edge system, so the paper's serving loop is one
 query at a time; the scheduler still models arrival queues and SLO misses so
 the benchmarks can report tail latencies under load, and groups decode
 requests into fixed-size batches (what serve_step lowers for on the pod).
+
+MULTI-TENANT ADMISSION: when many tenants share the device, a bursty tenant
+can queue enough work that everyone else's deadlines blow before service
+even starts (the noisy-neighbor problem).  :class:`TokenBucketAdmission`
+gives each tenant a refill rate (its fair share of device throughput) and
+decides per request at dequeue time: a request whose realized queue wait
+already exceeds its SLO is rejected outright (serving it would burn device
+time on a guaranteed miss — load-shedding THOSE requests is what protects
+everyone else's tail), a request with a token is admitted, and a request
+with neither is admitted anyway if the device is idle (the bucket is
+work-conserving: fair-share limits only bind under contention) or
+rejected/pre-degraded otherwise.  Rejected requests complete immediately
+with ``outcome == "rejected"`` and zero service time.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional, Union
 
 
 @dataclasses.dataclass(order=True)
@@ -21,11 +34,17 @@ class Request:
                                                     default=None)
     query_chars: int = dataclasses.field(compare=False, default=0)
     slo_s: float = dataclasses.field(compare=False, default=1.0)
+    tenant: str = dataclasses.field(compare=False, default="")
     # filled on completion
     start_s: float = dataclasses.field(compare=False, default=0.0)
     finish_s: float = dataclasses.field(compare=False, default=0.0)
     degraded: bool = dataclasses.field(compare=False, default=False)
     # ^ served, but the degradation ladder shed work to make the deadline
+    pre_degraded: bool = dataclasses.field(compare=False, default=False)
+    # ^ admission flagged this request for maximal degradation before
+    #   service started (TokenBucketAdmission mode="degrade")
+    rejected: bool = dataclasses.field(compare=False, default=False)
+    # ^ admission control shed the request: never served
     failed: bool = dataclasses.field(compare=False, default=False)
     # ^ serve_fn raised: the request produced no answer (run() keeps going)
     error: str = dataclasses.field(compare=False, default="")
@@ -36,13 +55,17 @@ class Request:
 
     @property
     def slo_met(self) -> bool:
-        return not self.failed and self.latency_s <= self.slo_s
+        return (not self.failed and not self.rejected
+                and self.latency_s <= self.slo_s)
 
     @property
     def outcome(self) -> str:
         """How the request ended: "met" (deadline met cleanly),
         "degraded" (met, but only by shedding work), "missed" (served
-        past its deadline), "failed" (serve_fn raised)."""
+        past its deadline), "rejected" (admission control shed it),
+        "failed" (serve_fn raised)."""
+        if self.rejected:
+            return "rejected"
         if self.failed:
             return "failed"
         if self.latency_s > self.slo_s:
@@ -50,8 +73,75 @@ class Request:
         return "degraded" if self.degraded else "met"
 
 
+class TokenBucketAdmission:
+    """Per-tenant token-bucket admission control (module docstring).
+
+    ``rate_per_s`` is each tenant's refill rate in requests/second — a
+    single float (uniform fair share) or a ``{tenant: rate}`` dict;
+    ``burst`` is the bucket depth (how far a tenant may burst past its
+    rate).  ``mode="reject"`` sheds over-share requests; ``"degrade"``
+    admits them flagged ``pre_degraded`` so the serving path applies the
+    degradation ladder's floor instead of full-quality work.  Decisions at
+    dequeue: a request whose realized queue wait already blew its SLO is
+    always shed (mode notwithstanding, serving it is pure waste) and an
+    idle device always admits (work-conserving).
+    """
+
+    def __init__(self, rate_per_s: Union[float, Dict[str, float]],
+                 burst: float = 4.0, *, mode: str = "reject"):
+        assert mode in ("reject", "degrade"), mode
+        self.rate_per_s = rate_per_s
+        self.burst = float(burst)
+        self.mode = mode
+        self._tokens: Dict[str, float] = {}
+        self._last: Dict[str, float] = {}
+        self.admitted: Dict[str, int] = {}
+        self.shed: Dict[str, int] = {}       # rejected or pre-degraded
+        self.blown: Dict[str, int] = {}      # shed for already-blown SLO
+
+    def _rate(self, tenant: str) -> float:
+        if isinstance(self.rate_per_s, dict):
+            return float(self.rate_per_s.get(tenant, 0.0))
+        return float(self.rate_per_s)
+
+    def decide(self, req: Request, clock: float) -> str:
+        """"admit" | "reject" | "degrade" for ``req`` dequeued at
+        ``clock`` (modeled seconds; ``clock - arrival_s`` is the queue
+        wait the request has already paid)."""
+        t = req.tenant
+        now = req.arrival_s
+        tokens = self._tokens.get(t, self.burst)
+        last = self._last.get(t, now)
+        tokens = min(self.burst,
+                     tokens + max(0.0, now - last) * self._rate(t))
+        self._last[t] = now
+        wait = max(0.0, clock - req.arrival_s)
+        if wait >= req.slo_s:
+            # the queue alone already blew the deadline — shed
+            self.blown[t] = self.blown.get(t, 0) + 1
+            decision = "reject" if self.mode == "reject" else "degrade"
+        elif tokens >= 1.0:
+            tokens -= 1.0
+            decision = "admit"
+        elif wait <= 0.0:
+            decision = "admit"      # idle device: fair share doesn't bind
+        else:
+            decision = "reject" if self.mode == "reject" else "degrade"
+        self._tokens[t] = tokens
+        bucket = self.admitted if decision == "admit" else self.shed
+        bucket[t] = bucket.get(t, 0) + 1
+        return decision
+
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        tenants = set(self.admitted) | set(self.shed)
+        return {t: {"admitted": self.admitted.get(t, 0),
+                    "shed": self.shed.get(t, 0),
+                    "blown_slo": self.blown.get(t, 0)}
+                for t in sorted(tenants)}
+
+
 class RequestScheduler:
-    def __init__(self):
+    def __init__(self, admission: Optional[TokenBucketAdmission] = None):
         self._queue: List[Request] = []
         self.completed: List[Request] = []
         self._next_rid = 0
@@ -59,12 +149,14 @@ class RequestScheduler:
         self.errors: List[str] = []  # serve_fn exceptions (failed requests)
         self.pipeline_trace = None   # PipelineTrace from run_pipelined
         self.pipeline_responses = []  # flat RAGResponses from run_pipelined
+        self.admission = admission   # per-tenant SLO-aware admission
 
     def submit(self, arrival_s: float, query: str = "", query_emb=None,
-               query_chars: int = 0, slo_s: float = 1.0) -> Request:
+               query_chars: int = 0, slo_s: float = 1.0,
+               tenant: str = "") -> Request:
         req = Request(arrival_s=arrival_s, rid=self._next_rid, query=query,
                       query_emb=query_emb, query_chars=query_chars,
-                      slo_s=slo_s)
+                      slo_s=slo_s, tenant=tenant)
         self._next_rid += 1
         heapq.heappush(self._queue, req)
         return req
@@ -100,6 +192,18 @@ class RequestScheduler:
         while self._queue:
             req = heapq.heappop(self._queue)
             clock = max(clock, req.arrival_s)
+            if self.admission is not None:
+                decision = self.admission.decide(req, clock)
+                if decision == "reject":
+                    # shed without occupying the device: the clock does
+                    # not advance, so the backlog behind this request
+                    # drains sooner — that is the point
+                    req.rejected = True
+                    req.start_s = req.finish_s = clock
+                    self.completed.append(req)
+                    continue
+                if decision == "degrade":
+                    req.pre_degraded = True
             req.start_s = clock
             try:
                 service_s = float(serve_fn(req))
@@ -141,8 +245,21 @@ class RequestScheduler:
 
         reqs = []
         while self._queue:
-            reqs.append(heapq.heappop(self._queue))
+            req = heapq.heappop(self._queue)
+            if self.admission is not None:
+                # batch admission: token-bucket fair share only (stage
+                # queue waits are the pipeline's to degrade against)
+                decision = self.admission.decide(req, req.arrival_s)
+                if decision == "reject":
+                    req.rejected = True
+                    req.start_s = req.finish_s = req.arrival_s
+                    self.completed.append(req)
+                    continue
+                if decision == "degrade":
+                    req.pre_degraded = True
+            reqs.append(req)
         batches = []
+        any_tenant = any(r.tenant for r in reqs)
         for i in range(0, len(reqs), batch_size):
             group = reqs[i:i + batch_size]
             batches.append(PipelineBatch(
@@ -151,7 +268,8 @@ class RequestScheduler:
                 arrival_s=max(r.arrival_s for r in group),
                 slos=[r.slo_s for r in group],
                 policy=policy,
-                requests=group))
+                requests=group,
+                tenants=[r.tenant for r in group] if any_tenant else None))
         responses, trace = pipeline.run(batches)
         self.pipeline_trace = trace
         self.maintenance_s += (trace.maintenance_in_bubbles_s
@@ -166,8 +284,10 @@ class RequestScheduler:
         return sum(r.slo_met for r in self.completed) / len(self.completed)
 
     def outcome_counts(self) -> dict:
-        """Per-outcome request counts: met / degraded / missed / failed."""
-        counts = {"met": 0, "degraded": 0, "missed": 0, "failed": 0}
+        """Per-outcome request counts: met / degraded / missed / rejected /
+        failed."""
+        counts = {"met": 0, "degraded": 0, "missed": 0, "rejected": 0,
+                  "failed": 0}
         for r in self.completed:
             counts[r.outcome] += 1
         return counts

@@ -193,6 +193,53 @@ class EdgeSimulator:
             slo_hit_rate=float((retr <= slo_s).mean()))
 
 
+@dataclasses.dataclass
+class TenantTrace:
+    """A multi-tenant request arrival trace: who asks, and when.
+
+    ``tenant_ids[i]`` is the tenant issuing request ``i`` at
+    ``arrival_s[i]``.  Produced by :func:`zipf_over_tenants`; consumed by
+    the multi-tenant benchmark and any :class:`RequestScheduler` setup.
+    """
+    arrival_s: np.ndarray        # (N,) f64, nondecreasing
+    tenant_ids: np.ndarray       # (N,) int64, rank 0 = hottest tenant
+    n_tenants: int
+    zipf_a: float
+
+    def __len__(self) -> int:
+        return len(self.arrival_s)
+
+    def counts(self) -> Dict[int, int]:
+        """Requests per tenant rank (ranks with zero draws included)."""
+        out = {t: 0 for t in range(self.n_tenants)}
+        for t in self.tenant_ids:
+            out[int(t)] += 1
+        return out
+
+
+def zipf_over_tenants(n_tenants: int, n_requests: int, *,
+                      zipf_a: float = 1.2, gap_mean_s: float = 0.05,
+                      seed: int = 0) -> TenantTrace:
+    """Zipf-skewed tenant mix with Poisson arrivals.
+
+    Real multi-tenant request streams are head-heavy: one or two tenants
+    dominate while the tail trickles.  Tenant rank for each request is a
+    TRUNCATED Zipf(``zipf_a``) draw over exactly ``n_tenants`` ranks
+    (rank 0 hottest; probabilities ∝ 1/(rank+1)^a — clipping an unbounded
+    Zipf would dump the whole tail's mass onto the last rank instead);
+    inter-arrival gaps are exponential with mean ``gap_mean_s``, so the
+    trace is a Poisson process over a Zipf tenant marginal.
+    """
+    assert n_tenants >= 1 and n_requests >= 1
+    rng = np.random.default_rng(seed)
+    weights = 1.0 / np.arange(1, n_tenants + 1, dtype=np.float64) ** zipf_a
+    tenant_ids = rng.choice(n_tenants, size=n_requests,
+                            p=weights / weights.sum()).astype(np.int64)
+    arrival_s = np.cumsum(rng.exponential(gap_mean_s, size=n_requests))
+    return TenantTrace(arrival_s=arrival_s, tenant_ids=tenant_ids,
+                       n_tenants=n_tenants, zipf_a=zipf_a)
+
+
 def simulate_ttft(datasets: Optional[List[str]] = None,
                   configs: Optional[List[str]] = None,
                   **kw) -> Dict[str, Dict[str, SimResult]]:

@@ -81,3 +81,110 @@ def test_moving_average_tracks():
     ctl.observe(cache_miss=False, last_latency=1.0)
     ctl.observe(cache_miss=False, last_latency=0.0)
     assert abs(ctl.moving_avg_latency - 0.5) < 1e-9
+
+
+# ----------------------------------------------------------------------
+# shared-budget multi-tenancy (tuple keys on ONE cache)
+# ----------------------------------------------------------------------
+def test_shared_budget_eviction_is_tenant_blind():
+    """Eviction is one global argmin(gen_latency x counter): a cold
+    tenant's entries lose to a hot tenant's regardless of who inserted
+    last — tenants compete exactly as clusters do in the paper."""
+    cache = CostAwareLFUCache(capacity_bytes=4 * 32, decay_factor=1.0)
+    for cid in range(3):
+        cache.insert(("hot", cid), _emb(1), gen_latency=1.0)
+    cache.insert(("cold", 0), _emb(1), gen_latency=1.0)
+    for _ in range(3):
+        for cid in range(3):
+            cache.access(("hot", cid))
+    # full cache; cold's weight (1*1) is the global minimum
+    cache.insert(("hot", 3), _emb(1), gen_latency=1.0)
+    assert ("cold", 0) not in cache
+    assert all(("hot", c) in cache for c in range(4))
+    assert cache.per_tenant["cold"]["evictions"] == 1
+    assert cache.per_tenant["hot"]["evictions"] == 0
+
+
+def test_shared_budget_skewed_access_fairness():
+    """Two tenants with identical workloads but skewed access frequency:
+    the busy tenant ends up holding more of the shared budget, yet the
+    idle tenant's HOT entries survive (frequency wins, not identity)."""
+    cache = CostAwareLFUCache(capacity_bytes=6 * 32, decay_factor=1.0)
+    cache.insert(("idle", 0), _emb(1), gen_latency=1.0)
+    for _ in range(10):
+        cache.access(("idle", 0))               # one very hot idle entry
+    for round_ in range(4):
+        for cid in range(4):
+            key = ("busy", cid)
+            if cache.access(key) is None:
+                cache.insert(key, _emb(1), gen_latency=1.0)
+    assert ("idle", 0) in cache                  # survived the churn
+    assert (cache.tenant_bytes("busy") > cache.tenant_bytes("idle"))
+
+
+def test_per_tenant_byte_accounting_exact_after_churn():
+    """per_tenant bytes/entries must equal an eager recompute over the
+    live entries after arbitrary cross-tenant insert/access/evict/drop
+    churn (including replacements and threshold drops)."""
+    rng = np.random.default_rng(3)
+    cache = CostAwareLFUCache(capacity_bytes=1500, decay_factor=0.95)
+    tenants = ("a", "b", "c")
+    for step in range(400):
+        t = tenants[int(rng.integers(3))]
+        cid = int(rng.integers(8))
+        op = rng.random()
+        if op < 0.55:
+            cache.insert((t, cid), _emb(int(rng.integers(1, 4))),
+                         gen_latency=float(rng.random() + 0.01),
+                         min_latency_threshold=float(rng.random() * 0.2))
+        elif op < 0.85:
+            cache.access((t, cid))
+        elif op < 0.95:
+            cache.drop_below_threshold(float(rng.random() * 0.3), tenant=t)
+        else:
+            cache.invalidate_tenant(t)
+    eager_bytes = {t: 0 for t in tenants}
+    eager_entries = {t: 0 for t in tenants}
+    for key, entry in cache._entries.items():
+        eager_bytes[key[0]] += entry.nbytes
+        eager_entries[key[0]] += 1
+    for t in tenants:
+        assert cache.tenant_bytes(t) == eager_bytes[t]
+        assert cache.tenant_entries(t) == eager_entries[t]
+    assert cache.total_bytes() == sum(eager_bytes.values())
+    assert cache.total_bytes() <= 1500
+
+
+def test_scoped_drop_leaves_other_tenants_alone():
+    cache = CostAwareLFUCache(capacity_bytes=10_000)
+    cache.insert(("a", 1), _emb(1), gen_latency=0.05)
+    cache.insert(("a", 2), _emb(1), gen_latency=0.50)
+    cache.insert(("b", 1), _emb(1), gen_latency=0.05)
+    cache.drop_below_threshold(0.1, tenant="a")   # a's Alg. 3, not b's
+    assert ("a", 1) not in cache
+    assert ("a", 2) in cache
+    assert ("b", 1) in cache
+    cache.invalidate_tenant("b")
+    assert ("b", 1) not in cache
+    assert cache.tenant_bytes("b") == 0
+
+
+def test_tenant_view_facade_matches_shared_cache():
+    """TenantCacheView: int-keyed single-tenant API over the shared
+    cache; counters per tenant, capacity/total shared."""
+    from repro.core.cache_policy import TenantCacheView
+    shared = CostAwareLFUCache(capacity_bytes=10_000)
+    va = TenantCacheView(shared, "a")
+    vb = TenantCacheView(shared, "b")
+    va.insert(1, _emb(1), gen_latency=0.5)
+    vb.insert(1, _emb(2), gen_latency=0.5)
+    assert va.access(1) is not None and 1 in va
+    assert va.access(2) is None
+    assert va.hits == 1 and va.misses == 1
+    assert vb.hits == 0 and vb.misses == 0
+    assert va.tenant_bytes() == 32 and vb.tenant_bytes() == 64
+    # total_bytes is the SHARED figure (memory_bytes parity contract)
+    assert va.total_bytes() == shared.total_bytes() == 96
+    assert ("a", 1) in shared and ("b", 1) in shared
+    va.fresh()                        # scoped reset: only a's entries go
+    assert 1 not in va and 1 in vb

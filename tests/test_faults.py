@@ -438,5 +438,5 @@ def test_scheduler_per_request_outcomes():
     assert by_q["d"].outcome == "failed" and not by_q["d"].slo_met
     assert "backend exploded" in by_q["d"].error
     assert rs.outcome_counts() == {"met": 1, "degraded": 1, "missed": 1,
-                                   "failed": 1}
+                                   "failed": 1, "rejected": 0}
     assert len(rs.errors) == 1

@@ -1,0 +1,194 @@
+"""Prometheus-style metrics: primitive semantics, exposition format, and
+the three collectors (scheduler, pipeline trace, tenant router)."""
+import numpy as np
+import pytest
+
+from repro.core import EdgeCostModel, TenantRouter
+from repro.data import generate_dataset
+from repro.serving.engine import RAGEngine
+from repro.serving.metrics import (DEFAULT_BUCKETS, Counter, Gauge,
+                                   Histogram, MetricsRegistry,
+                                   collect_pipeline_trace, collect_router,
+                                   collect_scheduler)
+from repro.serving.pipeline import PipelineBatch, StagedPipeline
+from repro.serving.scheduler import RequestScheduler, TokenBucketAdmission
+
+pytestmark = pytest.mark.fast
+
+
+# ----------------------------------------------------------------------
+# primitives
+# ----------------------------------------------------------------------
+def test_counter_inc_and_labels():
+    c = Counter("edgerag_requests_total", "Requests.")
+    c.inc(labels={"tenant": "a", "outcome": "met"})
+    c.inc(2.0, labels={"tenant": "a", "outcome": "met"})
+    c.inc(labels={"tenant": "b", "outcome": "missed"})
+    assert c.value({"tenant": "a", "outcome": "met"}) == 3.0
+    assert c.value({"outcome": "met", "tenant": "a"}) == 3.0   # order-free
+    assert c.value({"tenant": "b", "outcome": "missed"}) == 1.0
+    assert c.value({"tenant": "zz", "outcome": "met"}) == 0.0
+    with pytest.raises(AssertionError):
+        c.inc(-1.0, labels={"tenant": "a"})     # counters only go up
+
+
+def test_gauge_set_and_overwrite():
+    g = Gauge("edgerag_cache_bytes", "Bytes.")
+    g.set(10.0, labels={"tenant": "a"})
+    g.set(4.0, labels={"tenant": "a"})
+    assert g.value({"tenant": "a"}) == 4.0
+    g.inc(1.5, labels={"tenant": "a"})
+    assert g.value({"tenant": "a"}) == 5.5
+    g.set(7.0)                                  # label-less sample
+    assert g.value() == 7.0
+
+
+def test_histogram_buckets_are_cumulative():
+    h = Histogram("h_seconds", "H.", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        h.observe(v)
+    samples = {kv[-1][1]: value for suffix, kv, value in h.samples()
+               if suffix == "_bucket"}
+    assert samples["0.1"] == 1
+    assert samples["1"] == 3            # cumulative: includes the 0.05
+    assert samples["10"] == 4
+    assert samples["+Inf"] == 5
+    assert h.count() == 5
+    assert h.sum() == pytest.approx(56.05)
+
+
+def test_histogram_quantile_interpolates():
+    h = Histogram("h_seconds", "H.", buckets=(1.0, 2.0, 4.0))
+    for v in [0.5] * 50 + [1.5] * 50:
+        h.observe(v)
+    assert 0.0 < h.quantile(0.25) <= 1.0
+    q99 = h.quantile(0.99)
+    assert 1.0 < q99 <= 2.0
+    # empty histogram: quantile is 0, not NaN
+    assert Histogram("e", "E.").quantile(0.5) == 0.0
+
+
+def test_default_buckets_span_serving_range():
+    assert DEFAULT_BUCKETS[0] <= 1e-3
+    assert DEFAULT_BUCKETS[-1] >= 60.0
+    assert list(DEFAULT_BUCKETS) == sorted(DEFAULT_BUCKETS)
+
+
+# ----------------------------------------------------------------------
+# registry + exposition format
+# ----------------------------------------------------------------------
+def test_registry_render_format():
+    reg = MetricsRegistry()
+    c = reg.counter("edgerag_requests_total", "Total requests.")
+    c.inc(labels={"tenant": "alice"})
+    reg.gauge("edgerag_memory_bytes", "Resident bytes.").set(123.0)
+    h = reg.histogram("edgerag_ttft_seconds", "TTFT.", buckets=(1.0,))
+    h.observe(0.5)
+    text = reg.render()
+    assert text.endswith("\n")
+    lines = text.splitlines()
+    assert "# HELP edgerag_requests_total Total requests." in lines
+    assert "# TYPE edgerag_requests_total counter" in lines
+    assert 'edgerag_requests_total{tenant="alice"} 1' in lines
+    assert "# TYPE edgerag_memory_bytes gauge" in lines
+    assert "edgerag_memory_bytes 123" in lines
+    assert "# TYPE edgerag_ttft_seconds histogram" in lines
+    assert 'edgerag_ttft_seconds_bucket{le="1"} 1' in lines
+    assert 'edgerag_ttft_seconds_bucket{le="+Inf"} 1' in lines
+    assert "edgerag_ttft_seconds_sum 0.5" in lines
+    assert "edgerag_ttft_seconds_count 1" in lines
+
+
+def test_registry_same_name_returns_same_metric():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", "X.")
+    b = reg.counter("x_total", "X.")
+    assert a is b
+    assert "x_total" in reg
+    with pytest.raises(AssertionError):
+        reg.gauge("x_total", "X.")      # name collision across types
+
+
+def test_label_value_escaping():
+    reg = MetricsRegistry()
+    c = reg.counter("x_total", "X.")
+    c.inc(labels={"tenant": 'we"ird\\te\nnant'})
+    text = reg.render()
+    assert r'x_total{tenant="we\"ird\\te\nnant"} 1' in text
+
+
+# ----------------------------------------------------------------------
+# collectors
+# ----------------------------------------------------------------------
+def test_collect_scheduler_counts_and_admission():
+    adm = TokenBucketAdmission(rate_per_s=1.0, burst=1.0)
+    sched = RequestScheduler(admission=adm)
+    for i in range(10):
+        sched.submit(i * 0.01, slo_s=100.0, tenant="a")
+    sched.run(lambda req: 0.5)
+    reg = MetricsRegistry()
+    collect_scheduler(reg, sched)
+    counts = sched.outcome_counts()
+    req_total = reg.get("edgerag_requests_total")
+    assert req_total.value(
+        {"tenant": "a", "outcome": "met"}) == counts["met"]
+    assert req_total.value(
+        {"tenant": "a", "outcome": "rejected"}) == counts["rejected"]
+    dec = reg.get("edgerag_admission_decisions_total")
+    assert (dec.value({"tenant": "a", "decision": "admitted"})
+            == adm.admitted["a"])
+    assert dec.value({"tenant": "a", "decision": "shed"}) == adm.shed["a"]
+    ttft = reg.get("edgerag_request_ttft_seconds")
+    # rejected requests never started: only served ones have a TTFT sample
+    served = counts["met"] + counts["missed"]
+    assert ttft.count({"tenant": "a"}) == served
+    assert served + counts["rejected"] == 10
+
+
+def _serving_stack(corpora, cost):
+    router = TenantRouter(32, cost, slo_s=0.002, cache_bytes=1 << 20)
+    for t, ds in enumerate(corpora):
+        ix = router.create_tenant(f"t{t}", ds.embedder, ds.get_chunks)
+        ix.build(ds.chunk_ids, ds.texts, nlist=10,
+                 embeddings=ds.embeddings, seed=1)
+    eng = RAGEngine(router, None, cost_model=cost, k=4, nprobe=3,
+                    maintenance_owner="external")
+    return router, eng
+
+
+def test_collect_pipeline_trace_and_router():
+    cost = EdgeCostModel()
+    corpora = [generate_dataset(n_records=300, dim=32, n_topics=8,
+                                n_queries=4, seed=60 + t) for t in range(2)]
+    router, eng = _serving_stack(corpora, cost)
+    pipe = StagedPipeline(eng, None)
+    embs = np.stack([corpora[0].query_embs[0], corpora[1].query_embs[0]])
+    _, trace = pipe.run([
+        PipelineBatch(queries=["q", "q"], query_embs=embs, arrival_s=0.0,
+                      tenants=["t0", "t1"]),
+        PipelineBatch(queries=["q", "q"], query_embs=embs, arrival_s=1e-4,
+                      tenants=["t1", "t0"])])
+    reg = MetricsRegistry()
+    collect_pipeline_trace(reg, trace)
+    busy = reg.get("edgerag_stage_busy_seconds")
+    assert busy.value({"stage": "s2"}) == pytest.approx(
+        trace.stages["s2"].busy_s)
+    assert (reg.get("edgerag_stage_fired_total").value({"stage": "s4"})
+            == trace.stages["s4"].n_fired)
+    assert (reg.get("edgerag_pipeline_makespan_seconds").value()
+            == pytest.approx(trace.makespan_s))
+    collect_router(reg, router)
+    pt = router.cache.per_tenant
+    for t in ("t0", "t1"):
+        labels = {"tenant": t}
+        assert (reg.get("edgerag_cache_bytes").value(labels)
+                == pt.get(t, {}).get("bytes", 0))
+        assert (reg.get("edgerag_storage_bytes").value(labels)
+                == router.storage.tenant_bytes(t))
+    assert (reg.get("edgerag_cache_capacity_bytes").value()
+            == router.cache.capacity_bytes)
+    assert (reg.get("edgerag_memory_bytes").value()
+            == router.memory_bytes())
+    # one registry renders all three collectors without duplicate blocks
+    text = reg.render()
+    assert text.count("# TYPE edgerag_stage_busy_seconds") == 1

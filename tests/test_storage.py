@@ -188,3 +188,96 @@ def test_rebuild_clears_stale_storage(ds):
     # the learned Alg. 3 threshold resets with the corpus
     assert er.threshold.threshold == 0.0
     assert len(er.cache) == 0
+
+
+# ----------------------------------------------------------------------
+# multi-tenancy: namespacing, collision guard, shared budget, views
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["memory", "disk"])
+def test_tuple_keys_namespace_tenants(mode, tmp_path):
+    """(tenant, cid) keys coexist with bare-int keys; disk mode lands
+    them in tenant_<name>/ subdirectories and keys() enumerates both."""
+    root = str(tmp_path) if mode == "disk" else None
+    s = StorageBackend(mode, root=root)
+    a = _emb(n=6, seed=1)
+    b = _emb(n=7, seed=2)
+    s.put(3, _emb(n=5, seed=0))
+    s.put(("alice", 3), a)
+    s.put(("bob", 3), b)                 # same cid, different tenant
+    assert set(s.keys()) == {3, ("alice", 3), ("bob", 3)}
+    assert np.array_equal(s.get(("alice", 3)), a)
+    assert np.array_equal(s.get(("bob", 3)), b)
+    if mode == "disk":
+        assert os.path.exists(
+            os.path.join(root, "tenant_alice", "cluster_3.npz"))
+    s.delete(("alice", 3))
+    assert ("alice", 3) not in s and ("bob", 3) in s and 3 in s
+
+
+def test_disk_collision_guard_blocks_second_writer(tmp_path):
+    """Two LIVE writers on one (root, namespace) slot: the second put
+    raises instead of silently interleaving blobs.  Distinct namespaces
+    co-locate cleanly; read-only reopens never claim."""
+    a = StorageBackend("disk", root=str(tmp_path))
+    a.put(1, _emb(n=4))
+    b = StorageBackend("disk", root=str(tmp_path))
+    with pytest.raises(RuntimeError, match="collision"):
+        b.put(2, _emb(n=4))
+    # read-only access through a second instance stays legal
+    assert np.array_equal(b.get(1), a.get(1))
+    assert b.total_bytes() == a.total_bytes()
+    # distinct namespaces under the same root: both writers allowed
+    c = StorageBackend("disk", root=str(tmp_path), namespace="svc_a")
+    d = StorageBackend("disk", root=str(tmp_path), namespace="svc_b")
+    assert c.put(1, _emb(n=4)) > 0
+    assert d.put(1, _emb(n=4)) > 0
+    assert c.keys() == [1] and d.keys() == [1]    # scoped enumerations
+
+
+def test_disk_collision_claim_dies_with_writer(tmp_path):
+    a = StorageBackend("disk", root=str(tmp_path))
+    a.put(1, _emb(n=4))
+    del a                                # claim is a weakref: released
+    b = StorageBackend("disk", root=str(tmp_path))
+    assert b.put(2, _emb(n=4)) > 0       # new sole writer
+
+
+def test_shared_budget_refuses_put(tmp_path):
+    """budget_bytes is a SHARED quota across all tenants: an over-budget
+    put stores nothing, returns 0, and bumps put_rejected."""
+    emb = _emb(n=10, d=64)               # 2560 B fp32
+    s = StorageBackend("memory", budget_bytes=3 * emb.nbytes)
+    assert s.put(("a", 0), emb) == emb.nbytes
+    assert s.put(("a", 1), emb) == emb.nbytes
+    assert s.put(("b", 0), emb) == emb.nbytes
+    rej = s.put(("b", 1), emb)           # 4th would exceed the quota
+    assert rej == 0
+    assert ("b", 1) not in s
+    assert s.io_stats["put_rejected"] == 1
+    assert s.total_bytes() == 3 * emb.nbytes
+    # re-putting an EXISTING key charges the delta, not double
+    assert s.put(("a", 0), emb) == emb.nbytes
+    assert s.total_bytes() == 3 * emb.nbytes
+
+
+def test_tenant_view_scopes_keys_and_clear(tmp_path):
+    shared = StorageBackend("disk", root=str(tmp_path))
+    from repro.core.storage import TenantStorageView
+    va = TenantStorageView(shared, "a")
+    vb = TenantStorageView(shared, "b")
+    ea, eb = _emb(n=4, seed=1), _emb(n=9, seed=2)
+    va.put(0, ea)
+    va.put(1, ea)
+    vb.put(0, eb)
+    assert sorted(va.keys()) == [0, 1] and vb.keys() == [0]
+    assert np.array_equal(vb.get(0), eb)          # no cross-tenant bleed
+    assert va.total_bytes() == 2 * ea.nbytes
+    assert vb.total_bytes() == eb.nbytes
+    with pytest.raises(KeyError):
+        vb.get(1)                                 # a's cid 1 is invisible
+    out = vb.get_many([0, 1])
+    assert np.array_equal(out[0], eb) and out[1] is None
+    va.clear()                                    # scoped: b untouched
+    assert va.keys() == [] and vb.keys() == [0]
+    assert shared.tenant_bytes("a") == 0
+    assert shared.tenant_bytes("b") == eb.nbytes
