@@ -1,0 +1,158 @@
+"""Disk-native PQ memmap tier: serve a corpus that exceeds the memory budget.
+
+The 100M-vector story in miniature: the cost model's resident-index budget is
+shrunk below the corpus's fp32 footprint, so an in-memory fp32 tier cannot
+hold the embeddings without thrashing.  Three arms build the same corpus:
+
+  * ``fp32``  — exact baseline, in-memory payloads (over budget by design);
+  * ``int8``  — dense quantized tier, in-memory payloads;
+  * ``pq``    — product-quantized codes in ``mode="memmap"`` storage: disk
+    payloads are ``np.memmap`` views that never fully load, and slab scoring
+    runs over per-query ADC LUTs instead of dequantized rows.
+
+Measured per arm: recall@10 vs ground-truth topics (+ ratio to fp32),
+retrieved-id overlap with fp32, storage bytes + reduction vs the fp32
+footprint, edge TTFT, and storage-load counts.  The PQ arm must keep
+recall@10 >= 0.95 of fp32 while storing >= 8x fewer bytes — small enough to
+fit the very budget the fp32 corpus blows through.
+
+Appends the grid to the BENCH trajectory as ``BENCH_pq_tier.json``.
+
+``python -m benchmarks.pq_tier [--out PATH] [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import EdgeCostModel, EdgeRAGIndex
+from repro.core.storage import StorageBackend
+from repro.data import generate_dataset
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_pq_tier.json")
+
+DIM = 64
+K = 10
+NPROBE = 6
+PQ_M = 24           # 3-dim subspaces: 24 B/row of codes vs 256 B fp32
+PROMPT_TOKENS = 32
+ARMS = ("fp32", "int8", "pq")
+
+
+def run(out_path: str = DEFAULT_OUT, quick: bool = False) -> Dict:
+    n_records = 1200 if quick else 3000
+    nq = 32 if quick else 96
+    nlist = max(8, n_records // 250)          # few, heavy clusters
+    ds = generate_dataset(n_records=n_records, dim=DIM,
+                          n_topics=max(16, n_records // 60),
+                          n_queries=nq, seed=11)
+    corpus_fp32 = n_records * DIM * 4
+    # Resident-index budget BELOW the corpus's fp32 footprint: the dense
+    # tiers are over budget, the PQ tier must fit.  (model_reserved eats all
+    # of device_memory except the slice we grant the index.)
+    budget = int(0.6 * corpus_fp32)
+    cost = EdgeCostModel(device_memory_bytes=6.0e9 + budget,
+                         model_reserved_bytes=6.0e9,
+                         storage_seq_bw_bytes_per_sec=2e6,
+                         storage_seek_s=0.002)
+    assert corpus_fp32 > cost.index_memory_budget
+    results: Dict = {
+        "n_records": n_records, "n_queries": nq, "nlist": nlist, "k": K,
+        "pq_m": PQ_M,
+        "corpus_fp32_bytes": corpus_fp32,
+        "index_memory_budget_bytes": cost.index_memory_budget,
+        "corpus_exceeds_budget": corpus_fp32 > cost.index_memory_budget,
+        "arms": {},
+    }
+    ids_by_arm: Dict[str, np.ndarray] = {}
+    tmp = tempfile.mkdtemp(prefix="bench_pq_tier_")
+    try:
+        for arm in ARMS:
+            if arm == "pq":
+                storage = StorageBackend("memmap", root=os.path.join(tmp, arm),
+                                         codec="pq", pq_m=PQ_M)
+            else:
+                storage = StorageBackend("memory", codec=arm)
+            # tiny SLO + no cache: every search exercises the storage tier
+            er = EdgeRAGIndex(DIM, ds.embedder, ds.get_chunks, cost,
+                              slo_s=1e-6, store_heavy=True, cache_bytes=0,
+                              storage=storage)
+            er.build(ds.chunk_ids, ds.texts, nlist=nlist,
+                     embeddings=ds.embeddings, seed=1)
+            ids_rows, lats = [], []
+            for qi in range(nq):
+                row, _, lat = er.search(ds.query_embs[qi], K, NPROBE)
+                ids_rows.append(row[0])
+                lats.append(lat)
+            ids = np.stack(ids_rows)
+            ids_by_arm[arm] = ids
+            hits = sum(len(set(ids[qi].tolist()) & ds.relevant(qi))
+                       for qi in range(nq))
+            st = er.stats()
+            assert st["stored_clusters"] == st["active_clusters"]
+            results["arms"][arm] = {
+                "mode": er.storage.mode,
+                "recall_at10": hits / (nq * K),
+                "ttft_edge_s": float(np.mean(
+                    [l.retrieval_s + cost.prefill_latency(PROMPT_TOKENS)
+                     for l in lats])),
+                "storage_bytes": st["storage_bytes"],
+                "reduction_vs_fp32": corpus_fp32 / st["storage_bytes"],
+                "fits_budget": st["storage_bytes"] <= cost.index_memory_budget,
+                "n_storage_loads": sum(l.n_storage_loads for l in lats),
+                "pq_lut_s": float(sum(l.l2_pq_lut_s for l in lats)),
+                "pq_gather_s": float(sum(l.l2_pq_gather_s for l in lats)),
+            }
+        fp32 = results["arms"]["fp32"]
+        for arm in ARMS:
+            cell = results["arms"][arm]
+            cell["recall_ratio_vs_fp32"] = (cell["recall_at10"]
+                                            / max(fp32["recall_at10"], 1e-12))
+            cell["id_overlap_vs_fp32"] = float(np.mean([
+                len(set(ids_by_arm[arm][qi].tolist())
+                    & set(ids_by_arm["fp32"][qi].tolist())) / K
+                for qi in range(nq)]))
+            emit(f"pq_tier.{arm}", cell["ttft_edge_s"] * 1e6,
+                 f"recall@10={cell['recall_at10']:.3f} "
+                 f"ratio={cell['recall_ratio_vs_fp32']:.3f} "
+                 f"reduction={cell['reduction_vs_fp32']:.2f}x "
+                 f"loads={cell['n_storage_loads']}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    pq = results["arms"]["pq"]
+    results["criteria"] = {
+        "recall_ratio_ge_0p95": pq["recall_ratio_vs_fp32"] >= 0.95,
+        "reduction_ge_8x": pq["reduction_vs_fp32"] >= 8.0,
+        "pq_smaller_than_int8": (pq["storage_bytes"]
+                                 < results["arms"]["int8"]["storage_bytes"]),
+        "pq_fits_budget": pq["fits_budget"],
+        "served_from_storage": pq["n_storage_loads"] > 0,
+    }
+    ok = all(results["criteria"].values())
+    results["criteria_met"] = ok
+    print(f"# pq memmap tier criteria: {'PASS' if ok else 'FAIL'} "
+          f"{results['criteria']}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {out_path}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(args.out, args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,13 +10,16 @@
 # or pipelined answers drift from the sequential path; pass tenant-smoke
 # for a quick-scale multi-tenant run that fails if the shared substrate is
 # slower than per-tenant silos or multi-tenancy perturbs single-tenant
-# results bitwise.
+# results bitwise; pass pq-smoke for a quick-scale disk-native PQ memmap
+# tier run that fails if PQ recall drops below 0.95 of fp32, PQ bytes
+# reach the int8 tier, or the byte reduction falls under 8x.
 #   scripts/ci.sh                 -> pytest -m "not slow"
 #   scripts/ci.sh --full          -> full suite
 #   scripts/ci.sh bench-smoke     -> quick benchmarks + BENCH_*.json key check
 #   scripts/ci.sh chaos-smoke     -> quick fault-tolerance bench + schema check
 #   scripts/ci.sh pipeline-smoke  -> quick pipeline-throughput bench + checks
 #   scripts/ci.sh tenant-smoke    -> quick multi-tenant bench + schema check
+#   scripts/ci.sh pq-smoke        -> quick pq memmap-tier bench + schema check
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -223,10 +226,42 @@ assert m["criteria"]["single_tenant_bitwise"], \
 print(f"tenant-smoke OK: {m['qps_ratio']:.2f}x vs silos at "
       f"{m['n_tenants']} tenants, ids identical, single-tenant bitwise")
 PY
+elif [[ "${1:-}" == "pq-smoke" ]]; then
+    out="$(mktemp -d)"
+    trap 'rm -rf "$out"' EXIT
+    python -m benchmarks.pq_tier --quick \
+        --out "$out/BENCH_pq_tier.json"
+    python - "$out" <<'PY'
+import json, os, sys
+
+p = json.load(open(os.path.join(sys.argv[1], "BENCH_pq_tier.json")))
+for key in ("n_records", "n_queries", "nlist", "k", "pq_m",
+            "corpus_fp32_bytes", "index_memory_budget_bytes",
+            "corpus_exceeds_budget", "arms", "criteria"):
+    assert key in p, f"BENCH_pq_tier.json missing key: {key}"
+for arm in ("fp32", "int8", "pq"):
+    cell = p["arms"][arm]
+    for key in ("mode", "recall_at10", "ttft_edge_s", "storage_bytes",
+                "reduction_vs_fp32", "fits_budget", "n_storage_loads",
+                "recall_ratio_vs_fp32", "id_overlap_vs_fp32"):
+        assert key in cell, f"arm {arm} missing key: {key}"
+assert p["corpus_exceeds_budget"], \
+    "pq bench lost its premise: corpus fits the resident budget"
+assert p["arms"]["pq"]["mode"] == "memmap", "pq arm is not memmap-backed"
+pq = p["arms"]["pq"]
+assert pq["recall_ratio_vs_fp32"] >= 0.95, \
+    f"pq recall fell to {pq['recall_ratio_vs_fp32']:.3f}x of fp32"
+assert pq["storage_bytes"] < p["arms"]["int8"]["storage_bytes"], \
+    "pq bytes not below the int8 tier"
+assert pq["reduction_vs_fp32"] >= 8.0, \
+    f"pq byte reduction fell to {pq['reduction_vs_fp32']:.2f}x"
+print(f"pq-smoke OK: {pq['recall_ratio_vs_fp32']:.3f}x recall of fp32 at "
+      f"{pq['reduction_vs_fp32']:.1f}x fewer bytes from memmap slabs")
+PY
 elif [[ -z "${1:-}" ]]; then
     python -m pytest -q -m "not slow"
 else
     echo "unknown lane: $1 (expected: no arg, --full, bench-smoke," \
-         "chaos-smoke, pipeline-smoke, or tenant-smoke)" >&2
+         "chaos-smoke, pipeline-smoke, tenant-smoke, or pq-smoke)" >&2
     exit 2
 fi

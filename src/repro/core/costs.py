@@ -51,6 +51,10 @@ class EdgeCostModel:
     # the (Q, N) score block, not the (N, D) slab — far cheaper per value
     # than a standalone decode pass that materializes an fp32 copy
     fused_dequant_values_per_sec: float = 8.0e9
+    # PQ slab scoring charges LUT build + code gather INSTEAD of dequant:
+    # a row's score is m table lookups + adds (random access, no SIMD
+    # stream), well below the fused-dequant rate
+    pq_lookup_values_per_sec: float = 4.0e9
     # LLM prefill (Sheared-LLaMA-2.7B on Orin): tokens/s
     prefill_tokens_per_sec: float = 400.0
     # autoregressive decode: one forward pass per tick, memory-bandwidth
@@ -93,6 +97,19 @@ class EdgeCostModel:
         slab (per unique cluster) — never per probing query."""
         return n_values / self.fused_dequant_values_per_sec
 
+    def pq_lut_latency(self, dim: int, n_centroids: int = 256) -> float:
+        """Building ONE query's ADC tables: every subspace dots the query
+        slice against its 256 centroids — together one (256, dim) matmul,
+        2·256·dim flops.  Charged per query per batch (the tables are
+        reused across every PQ row the query scores)."""
+        return 2.0 * n_centroids * dim / self.search_flops_per_sec
+
+    def pq_gather_latency(self, n_lookups: int) -> float:
+        """In-kernel gather+accumulate over PQ codes, owner-charged once
+        per slab cluster (rows × m lookups) — replaces the dequant charge
+        other codecs pay."""
+        return n_lookups / self.pq_lookup_values_per_sec
+
     def slab_pack_latency(self, n_bytes: int) -> float:
         """Copying one resolved cluster's compact payload into the batch
         slab: a DRAM read + write.  Replaces the old per-query concat,
@@ -122,6 +139,9 @@ class LatencyBreakdown:
     # packed-slab scoring engine (owner-charged, once per unique cluster):
     l2_slab_pack_s: float = 0.0         # compact payload copy into the slab
     l2_fused_dequant_s: float = 0.0     # in-kernel fp16/int8 decode
+    # PQ tier (charged INSTEAD of dequant for pq segments):
+    l2_pq_lut_s: float = 0.0            # per-query ADC table build
+    l2_pq_gather_s: float = 0.0         # in-kernel code gather+accumulate
     # failure model (core/faults.py) — zero on the fault-free path:
     l2_stall_s: float = 0.0             # injected storage stall tail (I/O)
     l2_retry_backoff_s: float = 0.0     # modeled retry exponential backoff
@@ -145,8 +165,8 @@ class LatencyBreakdown:
         "plan": ("embed_query_s", "centroid_search_s"),
         "fetch": ("l2_generate_s", "l2_storage_load_s", "l2_dequant_s",
                   "l2_cache_hit_s", "l2_stall_s", "l2_retry_backoff_s"),
-        "score": ("l2_slab_pack_s", "l2_fused_dequant_s", "l2_mem_load_s",
-                  "l2_search_s"),
+        "score": ("l2_slab_pack_s", "l2_fused_dequant_s", "l2_pq_lut_s",
+                  "l2_pq_gather_s", "l2_mem_load_s", "l2_search_s"),
     }
 
     def stage_s(self, stage: str) -> float:

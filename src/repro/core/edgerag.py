@@ -194,13 +194,16 @@ def slab_score_topk(slab, queries: np.ndarray, k: int,
                     *, mesh=None, shard_axis: str = "data"
                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """The S3 scoring core: ONE ragged multi-query top-k launch per slab
-    segment (at most three: fp32/fp16/int8), segments merged per query
+    segment (at most four: fp32/fp16/int8/pq), segments merged per query
     under the virt tie-break.  Shared verbatim by ``search_finish`` and the
     multi-tenant router's fused cross-tenant scoring — each (query, row)
     pair's result depends only on that query's member rows (the virt mask
     excludes everything else), so fusing several tenants' clusters into one
-    slab cannot perturb any query's (ids, scores).  Returns
-    ``(out_ids (Q,k), out_vals (Q,k), n_valid (Q,))``.
+    slab cannot perturb any query's (ids, scores).  PQ segments build the
+    batch's ADC tables ONCE here (``pq_luts``) and score codes by in-kernel
+    gather+accumulate — the sharded route row-shards the codes and
+    replicates the tables.  Returns ``(out_ids (Q,k), out_vals (Q,k),
+    n_valid (Q,))``.
     """
     nq = queries.shape[0]
     out_ids = np.full((nq, k), -1, np.int64)
@@ -212,14 +215,18 @@ def slab_score_topk(slab, queries: np.ndarray, k: int,
         if seg.rows == 0:
             continue
         virt = virts[seg.kind]
+        luts = None
+        if seg.kind == "pq":
+            from repro.core.pq import pq_luts
+            luts = pq_luts(seg.codebook, queries)     # (Q, m, 256), once
         if mesh is not None and seg.rows >= k:
             from repro.core.sharded_retrieval import sharded_slab_topk
             vals, rows = sharded_slab_topk(
                 seg.emb, queries, virt, k, mesh,
-                shard_axis, scales=seg.scales)
+                shard_axis, scales=seg.scales, luts=luts)
         else:
             vals, rows = slab_topk(seg.emb, queries, virt, k,
-                                   scales=seg.scales)
+                                   scales=seg.scales, luts=luts)
         vals, rows = np.asarray(vals), np.asarray(rows)
         # mask the padding lanes BEFORE the id gather and insist
         # every remaining row is in-range — the old path's np.clip
@@ -318,6 +325,17 @@ class EdgeRAGIndex:
             self.threshold.step_s, self.threshold.alpha)
         self._chunk_chars = {int(i): len(t)
                              for i, t in zip(chunk_ids, texts)}
+        if self.storage.codec == "pq":
+            # codebook lifecycle: TRAIN AT BUILD on the full corpus, before
+            # any Alg. 1 put encodes against it (a rebuild retrains — the
+            # version bump invalidates the cleared previous-corpus blobs).
+            # On a SHARED backend (TenantStorageView) the codebook is a
+            # physical-medium singleton: the first tenant build trains it,
+            # later tenants reuse it (retraining would invalidate their
+            # neighbors' blobs — that is retrain_pq's explicit job).
+            shared = hasattr(self.storage, "backend")
+            if not (shared and self.storage.pq is not None):
+                self.storage.train_pq(embeddings, seed=seed)
         self.centroids, assign = kmeans(embeddings, nlist,
                                         iters=kmeans_iters, seed=seed)
         self.clusters = []
@@ -568,7 +586,13 @@ class EdgeRAGIndex:
             out_ids, out_vals, n_valid = slab_score_topk(
                 slab, queries, k, probed_per_q,
                 mesh=state.mesh, shard_axis=state.shard_axis)
+            # PQ segments: every query's ADC tables are built once per
+            # batch (l2_pq_lut_s) — charged INSTEAD of any dequant
+            has_pq = any(seg.kind == "pq" and seg.rows
+                         for seg in slab.segments)
             for qi in range(nq):
+                if has_pq:
+                    lats[qi].l2_pq_lut_s += self.cost.pq_lut_latency(self.dim)
                 if n_valid[qi]:
                     lats[qi].l2_search_s = self.cost.search_latency(
                         int(n_valid[qi]), self.dim)
@@ -750,6 +774,29 @@ class EdgeRAGIndex:
         self.storage.delete(cid)
         cl.stored = False
         cl.stored_generation = -1
+
+    def retrain_pq(self, embeddings: np.ndarray, *, seed: int = 0):
+        """Drift retrain of the PQ codebook (lifecycle: train at build,
+        RETRAIN ON DRIFT).  Bumps the codebook version — every stored blob
+        is now stale (its ``cbv`` pins the old version) — then routes one
+        restore per stored cluster through the maintenance path (applied
+        inline under ``maintenance='sync'``, queued for bubble-drain under
+        ``'deferred'``): regenerate at full precision, re-encode under the
+        new codebook, re-persist.  A read racing an un-restored blob is
+        safe: the stale payload quarantine-drops and falls back to
+        regeneration (exact results, never old-codebook reconstructions).
+        """
+        assert self.storage.codec == "pq", "retrain_pq requires the pq codec"
+        self.storage.train_pq(embeddings, seed=seed)
+        for cid, cl in enumerate(self.clusters):
+            if not (cl.active and cl.stored):
+                continue
+            cl.generation += 1
+            cl.stored_generation = -1       # stale under the new codebook
+            if self.maintenance_mode == "sync":
+                self._restore_cluster(cid)
+            else:
+                self.maintenance.enqueue(OP_RESTORE, cid)
 
     def _reconcile_storage(self, cid: int):
         """Make the Alg. 1 invariant true for one cluster: (re)store it if

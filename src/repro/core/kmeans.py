@@ -54,6 +54,60 @@ def kmeans_pp_init(x: np.ndarray, k: int, rng: np.random.Generator):
     return np.stack(centroids)
 
 
+@jax.jit
+def _assign_l2(x, centroids):
+    # ||x - c||^2 = ||x||^2 - 2 x·c + ||c||^2 ; the x term is constant per
+    # row so argmin only needs the last two.
+    d = jnp.sum(centroids * centroids, axis=1)[None, :] - 2.0 * (x @ centroids.T)
+    return jnp.argmin(d, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _update_l2(x, assign, k: int):
+    one_hot = jax.nn.one_hot(assign, k, dtype=x.dtype)          # (n, k)
+    sums = one_hot.T @ x                                        # (k, d)
+    counts = one_hot.sum(0)[:, None]
+    return sums / jnp.maximum(counts, 1.0), counts[:, 0]
+
+
+def kmeans_euclidean(x: np.ndarray, k: int, iters: int = 20,
+                     seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Plain (non-spherical) Lloyd k-means for PQ subspace codebooks.
+
+    The IVF variant above assumes unit-normalized inputs; PQ subspaces are
+    arbitrary low-dimensional slices where re-normalizing centroids would
+    destroy the reconstruction, so centroids here are unconstrained means
+    under squared-Euclidean distance.  Returns (centroids (k, d),
+    assignments (n,))."""
+    x = np.ascontiguousarray(x, np.float32)
+    rng = np.random.default_rng(seed)
+    k = min(k, x.shape[0])
+    # k-means++ under true L2 (the unit-vector shortcut does not apply)
+    n = x.shape[0]
+    cent = [x[int(rng.integers(n))]]
+    d2 = np.sum((x - cent[0]) ** 2, axis=1)
+    for _ in range(1, k):
+        d2c = np.clip(d2, 1e-12, None)
+        idx = int(rng.choice(n, p=d2c / d2c.sum()))
+        cent.append(x[idx])
+        d2 = np.minimum(d2, np.sum((x - x[idx]) ** 2, axis=1))
+    xj = jnp.asarray(x)
+    cj = jnp.asarray(np.stack(cent))
+    for _ in range(iters):
+        assign = _assign_l2(xj, cj)
+        cj, counts = _update_l2(xj, assign, k)
+        empties = np.where(np.asarray(counts) == 0)[0]
+        if len(empties):
+            # re-seed empties to the points farthest from their centroid
+            d = np.sum((x - np.asarray(cj)[np.asarray(assign)]) ** 2, axis=1)
+            far = np.argsort(-d)[:len(empties)]
+            c_host = np.array(cj)
+            c_host[empties] = x[far]
+            cj = jnp.asarray(c_host)
+    assign = _assign_l2(xj, cj)
+    return np.array(cj), np.array(assign)
+
+
 def kmeans(x: np.ndarray, k: int, iters: int = 20,
            seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
     """Returns (centroids (k, d) unit-norm, assignments (n,))."""

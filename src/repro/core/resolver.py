@@ -47,14 +47,16 @@ runs ``execute`` in RAW mode — storage-tier clusters load their codec
 payloads *undecoded* (``StorageBackend.get_many_raw``) — and packs every
 resolved cluster exactly once into a :class:`SlabLayout`: one contiguous
 (N_total, d) embedding slab per storage representation present in the batch
-(fp32 / fp16 / int8+scales), a parallel chunk-id slab, and per-cluster
-(offset, length) extents.  The per-cluster payloads become views into the
-slab.  Scoring then runs ONE ragged multi-query kernel launch per segment
-instead of Q concat-and-top-k rounds, with fp16/int8 segments dequantized
-inside the kernel's dot-product block (per-row scales) — no fp32 copy of
-quantized storage is ever materialized.  Owners are charged the slab-pack
-copy (``l2_slab_pack_s``) and the fused decode (``l2_fused_dequant_s``)
-once per slab, not once per probing query.
+(fp32 / fp16 / int8+scales / pq codes), a parallel chunk-id slab, and
+per-cluster (offset, length) extents.  The per-cluster payloads become
+views into the slab.  Scoring then runs ONE ragged multi-query kernel
+launch per segment instead of Q concat-and-top-k rounds, with fp16/int8
+segments dequantized inside the kernel's dot-product block (per-row
+scales) and pq segments scored by in-kernel LUT gather+accumulate — no
+fp32 copy of quantized storage is ever materialized.  Owners are charged
+the slab-pack copy (``l2_slab_pack_s``) and the fused decode
+(``l2_fused_dequant_s``) or PQ code gather (``l2_pq_gather_s``) once per
+slab, not once per probing query.
 """
 from __future__ import annotations
 
@@ -142,12 +144,15 @@ class SlabPayload:
     """One resolved cluster in its scoring representation.
 
     ``kind`` is the slab segment it packs into: "fp32" (cache / regen /
-    fp32 storage), "fp16", or "int8" (undecoded storage payloads).
-    ``scales`` is the int8 codec's per-row scale column, (n, 1) f32.
+    fp32 storage), "fp16", "int8", or "pq" (undecoded storage payloads).
+    ``scales`` is the int8 codec's per-row scale column, (n, 1) f32; for
+    "pq", ``emb`` holds the (n, m) uint8 code matrix and ``codebook`` the
+    backend's :class:`~repro.core.pq.PQCodebook` the codes index into.
     """
     kind: str
     emb: np.ndarray
     scales: Optional[np.ndarray] = None
+    codebook: Optional[object] = None       # PQCodebook for kind == "pq"
 
     @property
     def rows(self) -> int:
@@ -159,11 +164,15 @@ class SlabPayload:
                                   else self.scales.nbytes)
 
     @classmethod
-    def from_raw(cls, payload: Dict[str, np.ndarray]) -> "SlabPayload":
+    def from_raw(cls, payload: Dict[str, np.ndarray],
+                 codebook=None) -> "SlabPayload":
         """Wrap an undecoded ``StorageBackend`` codec payload."""
         if "q" in payload:
             return cls("int8", payload["q"],
                        np.ascontiguousarray(payload["scale"], np.float32))
+        if "codes" in payload:
+            assert codebook is not None, "pq payload needs its codebook"
+            return cls("pq", payload["codes"], codebook=codebook)
         emb = payload["emb"]
         if emb.dtype == np.float16:
             return cls("fp16", emb)
@@ -173,11 +182,13 @@ class SlabPayload:
 @dataclasses.dataclass
 class SlabSegment:
     """One contiguous packed slab: every cluster of one representation."""
-    kind: str                       # "fp32" | "fp16" | "int8"
-    emb: np.ndarray                 # (rows, d) packed, segment dtype
+    kind: str                       # "fp32" | "fp16" | "int8" | "pq"
+    emb: np.ndarray                 # (rows, d) packed, segment dtype —
+    #                                 (rows, m) uint8 codes for "pq"
     scales: Optional[np.ndarray]    # (rows, 1) f32 — int8 segments only
     ids: np.ndarray                 # (rows,) int64 parallel chunk-id slab
     clusters: List[int]             # cluster ids in pack order
+    codebook: Optional[object] = None   # PQCodebook — pq segments only
 
     @property
     def rows(self) -> int:
@@ -191,8 +202,8 @@ class SlabLayout:
     ``extent`` maps cluster id -> (kind, row offset, row length) into the
     segment of that representation; clusters that resolved to zero rows
     (merged away between plan and execute) get a zero-length extent and
-    never reach scoring.  At most three segments exist (fp32 / fp16 /
-    int8); a pure-fp32 batch packs one.
+    never reach scoring.  At most four segments exist (fp32 / fp16 /
+    int8 / pq); a pure-fp32 batch packs one.
     """
     dim: int
     segments: List[SlabSegment]
@@ -233,6 +244,11 @@ class SlabLayout:
         ``ids_of(cid)`` supplies the cluster's current chunk ids; the
         staleness guards upstream guarantee they align with the payload
         rows (asserted here as defense in depth).
+
+        A single-cluster segment adopts its payload array as the slab by
+        reference instead of copying — with memmap-mode storage the slab
+        extent is then a slice of the on-disk mapping and no resident copy
+        of the payload ever exists.
         """
         by_kind: Dict[str, List[int]] = {}
         extent: Dict[int, Tuple[str, int, int]] = {}
@@ -244,9 +260,22 @@ class SlabLayout:
             by_kind.setdefault(p.kind, []).append(cid)
         segments: List[SlabSegment] = []
         for kind, cids in by_kind.items():
+            first = payloads[cids[0]]
+            cb = first.codebook if kind == "pq" else None
+            if len(cids) == 1:
+                cid = cids[0]
+                cl_ids = ids_of(cid)
+                assert len(cl_ids) == first.rows, \
+                    f"cluster {cid}: {len(cl_ids)} ids vs {first.rows} rows"
+                extent[cid] = (kind, 0, first.rows)
+                segments.append(SlabSegment(
+                    kind=kind, emb=first.emb, scales=first.scales,
+                    ids=np.asarray(cl_ids, np.int64), clusters=[cid],
+                    codebook=cb))
+                continue
             rows = sum(payloads[c].rows for c in cids)
-            d = payloads[cids[0]].emb.shape[1]
-            emb = np.empty((rows, d), payloads[cids[0]].emb.dtype)
+            d = first.emb.shape[1]
+            emb = np.empty((rows, d), first.emb.dtype)
             scales = (np.empty((rows, 1), np.float32) if kind == "int8"
                       else None)
             ids = np.empty((rows,), np.int64)
@@ -263,7 +292,8 @@ class SlabLayout:
                 extent[cid] = (kind, off, p.rows)
                 off += p.rows
             segments.append(SlabSegment(kind=kind, emb=emb, scales=scales,
-                                        ids=ids, clusters=list(cids)))
+                                        ids=ids, clusters=list(cids),
+                                        codebook=cb))
         return cls(dim=dim, segments=segments, extent=extent)
 
     def query_layout(self, probed_per_q: Sequence[Sequence[int]]):
@@ -463,7 +493,8 @@ class ClusterResolver:
                 lat.l2_storage_load_s += ix.cost.storage_load_latency(nbytes)
                 lat.n_storage_loads += 1
                 if raw:
-                    resolved[cid] = SlabPayload.from_raw(payload)
+                    resolved[cid] = SlabPayload.from_raw(
+                        payload, codebook=ix.storage.pq)
                     continue
                 embs = ix.storage.decode(payload)
                 if ix.storage.codec != "fp32":
@@ -616,7 +647,8 @@ class ClusterResolver:
                 lat.n_storage_loads += 1
                 lat.stale_served += 1
                 if raw:
-                    resolved[cid] = SlabPayload.from_raw(payload)
+                    resolved[cid] = SlabPayload.from_raw(
+                        payload, codebook=ix.storage.pq)
                     return
                 embs = ix.storage.decode(payload)
                 if ix.storage.codec != "fp32":
@@ -653,7 +685,9 @@ class ClusterResolver:
         the pack copy (``l2_slab_pack_s``) and, for fp16/int8 payloads,
         the fused in-kernel decode (``l2_fused_dequant_s``) — once per
         slab, not once per probing query (the old path dequantized and
-        re-concatenated shared clusters Q times over).
+        re-concatenated shared clusters Q times over).  PQ payloads are
+        charged the in-kernel code gather (``l2_pq_gather_s``, rows × m
+        lookups) INSTEAD of a dequant: no decode ever happens.
         """
         ix = self.index
         slab = SlabLayout.pack(ix.dim, list(plan.owner), payloads,
@@ -664,7 +698,9 @@ class ClusterResolver:
                 continue
             lat = lats[owner_qi]
             lat.l2_slab_pack_s += ix.cost.slab_pack_latency(p.nbytes)
-            if p.kind != "fp32":
+            if p.kind == "pq":
+                lat.l2_pq_gather_s += ix.cost.pq_gather_latency(p.emb.size)
+            elif p.kind != "fp32":
                 lat.l2_fused_dequant_s += ix.cost.fused_dequant_latency(
                     p.emb.size)
         return slab

@@ -71,22 +71,24 @@ def sharded_topk_ip(embs, queries, k: int, mesh, axis: str = "data"
 
 
 def sharded_slab_topk(emb, queries, virt, k: int, mesh, axis: str = "data",
-                      scales=None) -> Tuple[jax.Array, jax.Array]:
+                      scales=None, luts=None) -> Tuple[jax.Array, jax.Array]:
     """Pod-sharded ragged multi-query top-k over ONE packed slab per batch.
 
     The pre-slab sharded route issued one ``sharded_topk_ip`` per query
     over that query's re-concatenated clusters — Q all-gathers and Q
     copies of every shared cluster.  Here the batch's packed slab ``emb``
-    (N, D; fp32/fp16/int8) row-shards over ``axis`` together with its
-    membership matrix ``virt`` (Q, N, sharded on N) and optional per-row
-    ``scales`` (N, 1); every shard scores its local rows for ALL queries
-    with fused dequant, selects its local best-k by (score desc, virt
-    asc), and one all-gather of k·shards candidates per query merges
-    globally under the same total order.  Results are identical to
-    ``kernels.slab_topk.slab_topk`` on the unsharded slab.
+    (N, D; fp32/fp16/int8 — or (N, m) uint8 PQ codes when ``luts`` is
+    given) row-shards over ``axis`` together with its membership matrix
+    ``virt`` (Q, N, sharded on N) and optional per-row ``scales`` (N, 1);
+    the per-query PQ LUTs (Q, m, 256) replicate like the queries they
+    stand in for.  Every shard scores its local rows for ALL queries with
+    fused dequant (or LUT gather+accumulate), selects its local best-k by
+    (score desc, virt asc), and one all-gather of k·shards candidates per
+    query merges globally under the same total order.  Results are
+    identical to ``kernels.slab_topk.slab_topk`` on the unsharded slab.
     """
     n, d = emb.shape
-    nq = queries.shape[0]
+    nq = virt.shape[0]
     if n == 0 or k == 0:
         return (jnp.full((nq, k), -np.inf, jnp.float32),
                 jnp.full((nq, k), ROW_PAD, jnp.int32))
@@ -101,13 +103,16 @@ def sharded_slab_topk(emb, queries, virt, k: int, mesh, axis: str = "data",
             scales = jnp.pad(scales, ((0, pad), (0, 0)))
     kk = min(k_eff, emb.shape[0] // n_shards)
 
-    def local_fn(emb_loc, q, virt_loc, *maybe_scales):
-        from repro.kernels.slab_topk.ref import lex_topk
+    def local_fn(emb_loc, q, virt_loc, *extras):
+        from repro.kernels.slab_topk.ref import lex_topk, pq_adc_scores
         shard = jax.lax.axis_index(axis)
         s_rows = emb_loc.shape[0]
-        scores = q.astype(jnp.float32) @ emb_loc.astype(jnp.float32).T
-        if maybe_scales:
-            scores = scores * maybe_scales[0].astype(jnp.float32)[:, 0][None]
+        if luts is not None:
+            scores = pq_adc_scores(emb_loc, extras[0].astype(jnp.float32))
+        else:
+            scores = q.astype(jnp.float32) @ emb_loc.astype(jnp.float32).T
+            if extras:
+                scores = scores * extras[0].astype(jnp.float32)[:, 0][None]
         masked = jnp.where(virt_loc < NOT_PROBED, scores, NEG_INF)
         # local best-kk by (score desc, virt asc)
         lvals, lidx = lex_topk(masked, virt_loc, kk)
@@ -125,7 +130,10 @@ def sharded_slab_topk(emb, queries, virt, k: int, mesh, axis: str = "data",
 
     in_specs = [P(axis, None), P(None, None), P(None, axis)]
     operands = [emb, queries, virt]
-    if scales is not None:
+    if luts is not None:
+        in_specs.append(P(None, None, None))    # replicated, like queries
+        operands.append(jnp.asarray(luts, jnp.float32))
+    elif scales is not None:
         in_specs.append(P(axis, None))
         operands.append(scales)
     fn = shard_map(local_fn, mesh=mesh,

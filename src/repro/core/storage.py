@@ -13,10 +13,35 @@ stored payload can be narrowed below fp32 —
   fp16   half-precision embeddings                       (2x fewer bytes)
   int8   per-row symmetric int8 + fp16 scales, reusing
          models/quantization.py's KV-cache scheme        (~3.9x fewer bytes)
+  pq     product quantization (core/pq.py): one uint8 code per subspace
+         against a backend-held codebook                 (8-32x fewer bytes)
+
+PQ CODEC: payloads are ``{"codes": uint8 (n, m), "cbv": version}`` — the
+codebook itself lives on the backend (``self.pq``), trained once at index
+build (``train_pq``) and persisted next to on-disk roots as
+``pq_codebook.npz`` so a reopened root still decodes.  ``cbv`` pins each
+blob to the codebook version that encoded it; after a drift retrain
+(version bump) a stale blob fails its read like a corrupt one —
+quarantine-dropped WITHOUT retries (the mismatch is deterministic) so the
+resolver regenerates at full precision and self-heals a fresh copy under
+the new codebook.  A ``put`` with no codebook yet lazily trains one on
+that put's rows (standalone-backend convenience; the index trains on the
+full corpus before its first put).
+
+MODES: ``memory`` (dict), ``disk`` (.npz files), and ``memmap`` — disk
+layout and crash-safe atomic writes, but reads return ``np.memmap`` views
+into the uncompressed npz members instead of loading arrays, so a
+100M-vector tier's payloads are never resident: ``get_many_raw`` hands the
+slab packer memmap-backed payloads it slices, not copies.  Checksum
+verification still touches every byte (it pages the mapping through the
+OS cache — the integrity guarantee is kept deliberately); the win is that
+nothing is ever *retained* in process memory.
 
 ``get``/``get_many`` always return contiguous f32 matrices (decode on
-load); ``stored_bytes``/``total_bytes`` report the *encoded* payload size,
-which is what the cost model charges for a storage load.
+load); ``stored_bytes``/``total_bytes`` report the encoded payload size in
+memory mode and the ``os.stat`` on-disk size in disk/memmap modes (what
+the medium actually stores and a load actually streams) — byte accounting
+NEVER reads payload data.
 
 RAW-CODEC LOADS (``get_many_raw``): the packed-slab scoring engine scores
 fp16/int8 clusters directly in their storage representation (fused
@@ -81,6 +106,7 @@ from __future__ import annotations
 
 import os
 import re
+import struct
 import tempfile
 import weakref
 import zipfile
@@ -91,8 +117,20 @@ import numpy as np
 
 from repro.core.faults import (CorruptPayloadError, FaultInjector,
                                InjectedFault, IOOutcome)
+from repro.core.pq import (PQCodebook, codebook_from_payload,
+                           codebook_to_payload, pq_decode, pq_encode,
+                           train_pq)
 
-CODECS = ("fp32", "fp16", "int8")
+CODECS = ("fp32", "fp16", "int8", "pq")
+MODES = ("memory", "disk", "memmap")
+_CODEBOOK_FILE = "pq_codebook.npz"
+
+
+class StaleCodebookError(CorruptPayloadError):
+    """PQ payload encoded under an older codebook version.  Deterministic —
+    retrying the read cannot help — so reads skip the backoff ladder and
+    quarantine-drop immediately, putting the cluster on the regen +
+    re-encode self-heal path."""
 
 _CLUSTER_FILE = re.compile(r"^cluster_(\d+)\.npz$")
 _TENANT_DIR = re.compile(r"^tenant_([A-Za-z0-9._-]+)$")
@@ -124,8 +162,8 @@ class StorageBackend:
     def __init__(self, mode: str = "memory", root: Optional[str] = None,
                  codec: str = "fp32", *, retry_limit: int = 3,
                  backoff_base_s: float = 0.002, namespace: str = "",
-                 budget_bytes: Optional[int] = None):
-        assert mode in ("memory", "disk")
+                 budget_bytes: Optional[int] = None, pq_m: int = 8):
+        assert mode in MODES, f"mode must be one of {MODES}, got {mode}"
         assert codec in CODECS, f"codec must be one of {CODECS}, got {codec}"
         assert _NAMESPACE_RE.match(namespace), \
             f"namespace must match [A-Za-z0-9._-]*, got {namespace!r}"
@@ -133,15 +171,22 @@ class StorageBackend:
         self.codec = codec
         self.namespace = namespace
         self.budget_bytes = budget_bytes
+        self.pq_m = pq_m
+        self.pq: Optional[PQCodebook] = None
         self._mem: Dict[StorageKey, Dict[str, np.ndarray]] = {}
-        self._nbytes: Dict[StorageKey, int] = {}    # encoded payload bytes
+        self._nbytes: Dict[StorageKey, int] = {}    # stored payload bytes
         self.root: Optional[str] = None
         self._base: Optional[str] = None            # root[/namespace]
-        if mode == "disk":
+        if mode != "memory":
             self.root = root or tempfile.mkdtemp(prefix="edgerag_store_")
             self._base = (os.path.join(self.root, namespace) if namespace
                           else self.root)
             os.makedirs(self._base, exist_ok=True)
+            cb_path = os.path.join(self._base, _CODEBOOK_FILE)
+            if os.path.exists(cb_path):      # reopened root: restore codebook
+                with np.load(cb_path) as z:
+                    self.pq = codebook_from_payload(
+                        {name: z[name] for name in z.files})
         # failure model (module docstring): injector hook + retry policy
         self.faults: Optional[FaultInjector] = None
         self.retry_limit = retry_limit
@@ -158,6 +203,11 @@ class StorageBackend:
             return {"emb": emb}
         if self.codec == "fp16":
             return {"emb": emb.astype(np.float16)}
+        if self.codec == "pq":
+            if self.pq is None:      # standalone-backend convenience: the
+                self.train_pq(emb)   # index trains on the corpus at build
+            return {"codes": pq_encode(self.pq, emb),
+                    "cbv": np.array([self.pq.version], np.int32)}
         from repro.models.quantization import quantize_rows
         q, scale = quantize_rows(emb)
         return {"q": q, "scale": scale}
@@ -166,6 +216,11 @@ class StorageBackend:
         if "q" in payload:
             from repro.models.quantization import dequantize_rows
             return dequantize_rows(payload["q"], payload["scale"])
+        if "codes" in payload:
+            if self.pq is None:
+                raise CorruptPayloadError(
+                    "pq payload but no codebook on this backend")
+            return pq_decode(self.pq, payload["codes"])
         return np.ascontiguousarray(payload["emb"], np.float32)
 
     def decode(self, payload: Dict[str, np.ndarray]) -> np.ndarray:
@@ -175,7 +230,38 @@ class StorageBackend:
     @staticmethod
     def payload_rows(payload: Dict[str, np.ndarray]) -> int:
         """Row count of a raw payload without decoding it."""
-        return len(payload["q"] if "q" in payload else payload["emb"])
+        if "q" in payload:
+            return len(payload["q"])
+        if "codes" in payload:
+            return len(payload["codes"])
+        return len(payload["emb"])
+
+    # ---- PQ codebook lifecycle ------------------------------------------
+    def train_pq(self, embeddings: np.ndarray, *, iters: int = 12,
+                 seed: int = 0) -> PQCodebook:
+        """(Re)train the product-quantization codebook on ``embeddings``.
+
+        First call -> version 0; later calls (drift retrains) bump the
+        version, which invalidates every blob encoded under the old one:
+        their next read raises :class:`StaleCodebookError`, quarantine-
+        drops, and the resolver self-heals a fresh copy.  On-disk modes
+        persist the codebook next to the root so reopens decode."""
+        version = 0 if self.pq is None else self.pq.version + 1
+        self.pq = train_pq(embeddings, m=self.pq_m, iters=iters, seed=seed,
+                           version=version)
+        if self.mode != "memory":
+            self._claim_root()
+            cb_path = os.path.join(self._base, _CODEBOOK_FILE)
+            tmp = cb_path + ".tmp"
+            try:
+                with open(tmp, "wb") as f:
+                    np.savez(f, **codebook_to_payload(self.pq))
+                os.replace(tmp, cb_path)
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.remove(tmp)
+                raise
+        return self.pq
 
     # ---- filesystem (disk mode only) ------------------------------------
     def _path(self, key: StorageKey) -> str:
@@ -214,9 +300,56 @@ class StorageBackend:
         path = self._path(key)
         if not os.path.exists(path):
             return None
+        if self.mode == "memmap":
+            return self._load_memmap(path, key)
         try:
             with np.load(path) as z:
                 return {name: z[name] for name in z.files}
+        except Exception as e:
+            raise CorruptPayloadError(f"unreadable blob for key {key}: {e}")
+
+    @staticmethod
+    def _load_memmap(path: str, key: StorageKey
+                     ) -> Dict[str, np.ndarray]:
+        """Open an npz as read-only ``np.memmap`` views, one per member.
+
+        ``np.savez`` stores members uncompressed (ZIP_STORED), so each
+        array's data is a contiguous byte range of the container file:
+        local-file-header offset + 30 + name/extra lengths + the .npy
+        header.  Mapping that range gives a zero-copy view — nothing is
+        read until a consumer touches pages (CRC verification does, by
+        design; slab packing slices first and touches only what it
+        scores)."""
+        try:
+            out: Dict[str, np.ndarray] = {}
+            with zipfile.ZipFile(path) as z, open(path, "rb") as raw:
+                for info in z.infolist():
+                    name = info.filename
+                    if name.endswith(".npy"):
+                        name = name[:-4]
+                    with z.open(info) as f:
+                        version = np.lib.format.read_magic(f)
+                        read_header = getattr(
+                            np.lib.format,
+                            "read_array_header_%d_%d" % version)
+                        shape, fortran, dtype = read_header(f)
+                        header_len = f.tell()
+                    if info.compress_type != zipfile.ZIP_STORED or fortran:
+                        raise ValueError(
+                            f"member {name} is not memmap-able")
+                    # the central directory's header_offset points at the
+                    # local file header: 30 fixed bytes, then name + extra
+                    raw.seek(info.header_offset + 26)
+                    n_name, n_extra = struct.unpack("<HH", raw.read(4))
+                    offset = (info.header_offset + 30 + n_name + n_extra
+                              + header_len)
+                    if int(np.prod(shape, dtype=np.int64)) == 0:
+                        out[name] = np.empty(shape, dtype)
+                    else:
+                        out[name] = np.memmap(path, mode="r", dtype=dtype,
+                                              shape=tuple(shape),
+                                              offset=offset)
+            return out
         except Exception as e:
             raise CorruptPayloadError(f"unreadable blob for key {key}: {e}")
 
@@ -237,6 +370,10 @@ class StorageBackend:
         body = {k: v for k, v in payload.items() if k != _CHECKSUM_KEY}
         if payload_checksum(body) != int(np.asarray(crc).reshape(-1)[0]):
             raise CorruptPayloadError(key)
+        if "codes" in body and self.pq is not None:
+            cbv = int(np.asarray(body.get("cbv", -1)).reshape(-1)[0])
+            if cbv != self.pq.version:
+                raise StaleCodebookError(key)
         self.io_stats["verified"] += 1
         return body
 
@@ -256,6 +393,12 @@ class StorageBackend:
                 self.io_stats["backoff_s"] += backoff
             try:
                 payload = self._read_once(key, outcome)
+            except StaleCodebookError:
+                # deterministic mismatch: retries cannot help, fall through
+                # to the quarantine-drop below without burning backoff
+                last_err = "corrupt"
+                self.io_stats["failed_attempts"] += 1
+                break
             except CorruptPayloadError:
                 last_err = "corrupt"
             except InjectedFault as e:
@@ -284,11 +427,13 @@ class StorageBackend:
 
     # ---- public API ------------------------------------------------------
     def put(self, key: StorageKey, embeddings: np.ndarray) -> int:
-        """Returns encoded (stored) byte size (checksum excluded — the CRC
-        is metadata, not payload), or 0 if the shared ``budget_bytes``
-        refused the write (nothing stored; the caller keeps the cluster on
-        the regen path).  Disk mode writes are atomic: temp file +
-        ``os.replace``, so a crash mid-write never tears the blob."""
+        """Returns the stored byte size — exact encoded payload bytes in
+        memory mode, the ``os.stat`` on-disk file size in disk/memmap
+        modes (container + checksum included: what the medium holds) — or
+        0 if the shared ``budget_bytes`` refused the write (nothing
+        stored; the caller keeps the cluster on the regen path).  On-disk
+        writes are atomic: temp file + ``os.replace``, so a crash
+        mid-write never tears the blob."""
         payload = self._encode(embeddings)
         nbytes = sum(a.nbytes for a in payload.values())
         if self.budget_bytes is not None:
@@ -314,6 +459,7 @@ class StorageBackend:
                 if os.path.exists(tmp):
                     os.remove(tmp)
                 raise
+            nbytes = os.stat(path).st_size
         self._nbytes[key] = nbytes
         return self._nbytes[key]
 
@@ -394,7 +540,8 @@ class StorageBackend:
         return out
 
     def stored_bytes(self, key: int) -> int:
-        """Encoded payload bytes of one cluster (what a load streams)."""
+        """Stored bytes of one cluster (what a load streams): exact encoded
+        bytes in memory mode, the on-disk file size otherwise."""
         if key not in self._nbytes:       # e.g. fresh instance on an old root
             if self.mode == "memory":
                 if key not in self._mem:
@@ -407,26 +554,15 @@ class StorageBackend:
         return self._nbytes[key]
 
     def _disk_payload_nbytes(self, key: int) -> int:
-        """Payload size from the .npy headers inside the zip — no array
-        data is read (total_bytes on a reopened root stays a metadata
-        query, not an O(store) load)."""
-        path = self._path(key)
-        if not os.path.exists(path):
+        """On-disk size via ``os.stat`` — byte accounting must never READ
+        the payload (at memmap scale, opening and parsing every blob to
+        count bytes would page the whole tier through memory).  The stat
+        size is also the honest number: container framing and the CRC
+        member are bytes the medium stores and a load streams."""
+        try:
+            return os.stat(self._path(key)).st_size
+        except OSError:
             raise KeyError(key)
-        total = 0
-        with zipfile.ZipFile(path) as z:
-            for name in z.namelist():
-                if name.split(".npy")[0] == _CHECKSUM_KEY:
-                    continue            # checksum member: metadata, not payload
-                with z.open(name) as f:
-                    version = np.lib.format.read_magic(f)
-                    read_header = getattr(
-                        np.lib.format,
-                        "read_array_header_%d_%d" % version)
-                    shape, _, dtype = read_header(f)
-                    total += int(np.prod(shape, dtype=np.int64)
-                                 * dtype.itemsize)
-        return total
 
     def total_bytes(self) -> int:
         return sum(self.stored_bytes(k) for k in self.keys())
@@ -479,6 +615,15 @@ class TenantStorageView:
     @faults.setter
     def faults(self, injector: Optional[FaultInjector]):
         self.backend.faults = injector
+
+    @property
+    def pq(self) -> Optional[PQCodebook]:
+        """The SHARED product-quantization codebook (one physical medium,
+        one codebook — tenants share it like they share ``io_stats``)."""
+        return self.backend.pq
+
+    def train_pq(self, embeddings: np.ndarray, **kw) -> PQCodebook:
+        return self.backend.train_pq(embeddings, **kw)
 
     # key-mapped blob API --------------------------------------------------
     def put(self, cid: int, embeddings: np.ndarray) -> int:

@@ -343,7 +343,13 @@ class TenantRouter:
             out_ids, out_vals, n_valid = slab_score_topk(
                 slab, state.queries, state.k, state.plan.probed_per_q,
                 mesh=state.mesh, shard_axis=state.shard_axis)
+            # same LUT-build charge as EdgeRAGIndex.search_finish: a pq
+            # segment means every query's ADC tables were built this batch
+            has_pq = any(seg.kind == "pq" and seg.rows
+                         for seg in slab.segments)
             for qi in range(nq):
+                if has_pq:
+                    lats[qi].l2_pq_lut_s += self.cost.pq_lut_latency(self.dim)
                 if n_valid[qi]:
                     lats[qi].l2_search_s = self.cost.search_latency(
                         int(n_valid[qi]), self.dim)

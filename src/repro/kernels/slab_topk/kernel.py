@@ -16,6 +16,15 @@ int8 dots in f32 and applies the per-row scale to the (BLOCK_Q, BLOCK_N)
 score block — one multiply per score instead of per element, and no
 (N, D) fp32 copy ever materializes.
 
+PQ (fourth representation): the slab block is the (BLOCK_N, m) uint8 code
+matrix and the per-query ADC tables (BLOCK_Q, m, 256) ride in as the
+second operand (queries are not needed — the LUTs already are the query).
+TPU VMEM has no efficient dynamic gather, so the in-kernel
+gather+accumulate is expressed as m one-hot matmuls: ``onehot(codes[:, j])``
+is a (256, BLOCK_N) selection matrix and ``luts[:, j, :] @ onehot`` lands
+on the MXU, accumulating the exact same ``sum_j luts[q, j, code]`` as the
+reference gather.  No decoded row and no codebook ever enter the kernel.
+
 Top-k maintenance is k iterations of a row-vectorized lexicographic
 (max-score, min-virt) select over the (BLOCK_Q, k + BLOCK_N) candidate
 matrix, same shape of work as ``ivf_topk`` with one extra reduction for
@@ -77,8 +86,8 @@ def _slab_merge_rows(scores, virt, base_idx, run_v, run_t, run_r, k: int):
 
 
 def _kernel(emb_ref, q_ref, virt_ref, *rest,
-            k: int, block_n: int, block_q: int, quantized: bool):
-    if quantized:
+            k: int, block_n: int, block_q: int, mode: str):
+    if mode == "scaled":
         scale_ref, out_v_ref, out_r_ref, run_v, run_t, run_r = rest
     else:
         out_v_ref, out_r_ref, run_v, run_t, run_r = rest
@@ -90,14 +99,28 @@ def _kernel(emb_ref, q_ref, virt_ref, *rest,
         run_t[...] = jnp.full((block_q, k), EXHAUSTED, jnp.int32)
         run_r[...] = jnp.full((block_q, k), ROW_SENTINEL, jnp.int32)
 
-    emb = emb_ref[...].astype(jnp.float32)                   # (BN, D) widen
-    q = q_ref[...].astype(jnp.float32)                       # (BQ, D)
-    scores = jax.lax.dot_general(                            # (BQ, BN) MXU
-        q, emb, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    if quantized:
-        # fused dequant: per-row scale on the score block, not the slab
-        scores = scores * scale_ref[...].astype(jnp.float32).T   # (1, BN)
+    if mode == "pq":
+        # ADC via one-hot matmul (module docstring): q_ref holds the
+        # per-query LUTs, emb_ref the uint8 codes
+        codes = emb_ref[...].astype(jnp.int32)               # (BN, m)
+        luts = q_ref[...].astype(jnp.float32)                # (BQ, m, 256)
+        iota = jax.lax.iota(jnp.int32, 256)
+        scores = jnp.zeros((block_q, block_n), jnp.float32)
+        for j in range(codes.shape[1]):                      # m is static
+            onehot = (codes[:, j][None, :] == iota[:, None]
+                      ).astype(jnp.float32)                  # (256, BN)
+            scores = scores + jax.lax.dot_general(           # (BQ, BN) MXU
+                luts[:, j, :], onehot, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+    else:
+        emb = emb_ref[...].astype(jnp.float32)               # (BN, D) widen
+        q = q_ref[...].astype(jnp.float32)                   # (BQ, D)
+        scores = jax.lax.dot_general(                        # (BQ, BN) MXU
+            q, emb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        if mode == "scaled":
+            # fused dequant: per-row scale on the score block, not the slab
+            scores = scores * scale_ref[...].astype(jnp.float32).T  # (1, BN)
     virt = virt_ref[...]                                     # (BQ, BN)
     scores = jnp.where(virt < NOT_PROBED, scores, NEG_INF)
     base = nb * block_n + jax.lax.iota(jnp.int32, block_n)
@@ -115,18 +138,19 @@ def _kernel(emb_ref, q_ref, virt_ref, *rest,
 
 @functools.partial(jax.jit, static_argnames=("k", "block_n", "block_q",
                                              "interpret"))
-def slab_topk_pallas(emb, queries, virt, k: int, scales=None, *,
+def slab_topk_pallas(emb, queries, virt, k: int, scales=None, luts=None, *,
                      block_n: int = 512, block_q: int = 8,
                      interpret: bool = True):
-    """emb (N, D) f32/f16/int8, queries (Q, D) f32, virt (Q, N) int32,
-    scales (N, 1) f16/f32 or None -> (vals (Q, k) f32, rows (Q, k) int32).
+    """emb (N, D) f32/f16/int8 — or (N, m) uint8 PQ codes when ``luts``
+    (Q, m, 256) is given; queries (Q, D) f32, virt (Q, N) int32, scales
+    (N, 1) f16/f32 or None -> (vals (Q, k) f32, rows (Q, k) int32).
 
     Pads N and Q to block multiples internally; padded slab rows get
     ``virt = NOT_PROBED`` so they never score, padded query rows are
     sliced off.  Requires k <= N (the ops layer clamps).
     """
     n, d = emb.shape
-    nq = queries.shape[0]
+    nq = virt.shape[0]
     block_q = max(1, min(block_q, nq))
     n_pad = (-n) % block_n
     if n_pad:
@@ -137,22 +161,33 @@ def slab_topk_pallas(emb, queries, virt, k: int, scales=None, *,
             scales = jnp.pad(scales, ((0, n_pad), (0, 0)))
     q_pad = (-nq) % block_q
     if q_pad:
-        queries = jnp.pad(queries, ((0, q_pad), (0, 0)))
         virt = jnp.pad(virt, ((0, q_pad), (0, 0)),
                        constant_values=NOT_PROBED)
+        if luts is not None:
+            luts = jnp.pad(luts, ((0, q_pad), (0, 0), (0, 0)))
+        else:
+            queries = jnp.pad(queries, ((0, q_pad), (0, 0)))
     n_blocks = emb.shape[0] // block_n
-    q_blocks = queries.shape[0] // block_q
+    q_blocks = virt.shape[0] // block_q
 
-    quantized = scales is not None
+    mode = "pq" if luts is not None else (
+        "scaled" if scales is not None else "fp32")
     kernel = functools.partial(_kernel, k=k, block_n=block_n,
-                               block_q=block_q, quantized=quantized)
+                               block_q=block_q, mode=mode)
+    if mode == "pq":
+        # queries never enter the kernel: the LUTs replace them
+        q_operand = luts
+        q_spec = pl.BlockSpec((block_q, d, 256), lambda qi, ni: (qi, 0, 0))
+    else:
+        q_operand = queries
+        q_spec = pl.BlockSpec((block_q, d), lambda qi, ni: (qi, 0))
     in_specs = [
         pl.BlockSpec((block_n, d), lambda qi, ni: (ni, 0)),
-        pl.BlockSpec((block_q, d), lambda qi, ni: (qi, 0)),
+        q_spec,
         pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),
     ]
-    operands = [emb, queries, virt]
-    if quantized:
+    operands = [emb, q_operand, virt]
+    if mode == "scaled":
         in_specs.append(pl.BlockSpec((block_n, 1), lambda qi, ni: (ni, 0)))
         operands.append(scales)
     out_v, out_r = pl.pallas_call(
@@ -164,8 +199,8 @@ def slab_topk_pallas(emb, queries, virt, k: int, scales=None, *,
             pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((queries.shape[0], k), jnp.float32),
-            jax.ShapeDtypeStruct((queries.shape[0], k), jnp.int32),
+            jax.ShapeDtypeStruct((virt.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((virt.shape[0], k), jnp.int32),
         ],
         scratch_shapes=[
             pltpu.VMEM((block_q, k), jnp.float32),

@@ -6,9 +6,11 @@ Dispatch mirrors ``ivf_topk.ops``:
     EdgeRAG runtime fast path) or the Pallas kernel in interpret mode
     (exercised by tests).
 
-The slab may be fp32, fp16, or int8 (+ per-row ``scales`` (N, 1));
-quantized slabs are scored with fused dequantization — no fp32 copy of
-the slab is ever materialized (see ref.py for the exact contract).
+The slab may be fp32, fp16, int8 (+ per-row ``scales`` (N, 1)), or PQ
+codes (+ per-query ``luts`` (Q, m, 256)); quantized slabs are scored with
+fused dequantization and PQ slabs with fused in-kernel gather+accumulate —
+no fp32 copy of the slab is ever materialized (see ref.py for the exact
+contract).
 """
 from __future__ import annotations
 
@@ -29,9 +31,11 @@ ROW_PAD = np.int32(2**30)    # row index of a padded output lane
 _jit_ref = jax.jit(slab_topk_ref, static_argnames=("k",))
 
 
-def slab_topk(emb, queries, virt, k: int, *, scales=None, impl: str = "auto"):
-    """emb (N, D) f32/f16/int8, queries (Q, D), virt (Q, N) int32,
-    scales (N, 1) or None -> (vals (Q, k) f32, rows (Q, k) int32).
+def slab_topk(emb, queries, virt, k: int, *, scales=None, luts=None,
+              impl: str = "auto"):
+    """emb (N, D) f32/f16/int8 — or (N, m) uint8 PQ codes when ``luts``
+    (Q, m, 256) is given; queries (Q, D), virt (Q, N) int32, scales (N, 1)
+    or None -> (vals (Q, k) f32, rows (Q, k) int32).
 
     One launch scores ALL queries against the packed slab; per query the
     best k member rows (``virt < NOT_PROBED``) by (score desc, virt asc).
@@ -55,11 +59,14 @@ def slab_topk(emb, queries, virt, k: int, *, scales=None, impl: str = "auto"):
     virt = jnp.asarray(virt, jnp.int32)
     if scales is not None:
         scales = jnp.asarray(scales, jnp.float32)
+    if luts is not None:
+        luts = jnp.asarray(luts, jnp.float32)
     if impl == "pallas" or (impl == "auto" and on_tpu()):
         vals, rows = slab_topk_pallas(emb, queries, virt, k_eff, scales,
-                                      interpret=not on_tpu())
+                                      luts, interpret=not on_tpu())
     else:
-        vals, rows = _jit_ref(emb, queries, virt, k=k_eff, scales=scales)
+        vals, rows = _jit_ref(emb, queries, virt, k=k_eff, scales=scales,
+                              luts=luts)
     if k_eff < k:
         pad = k - k_eff
         vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-np.inf)

@@ -19,6 +19,13 @@ slabs apply the per-row fp16 scale to the (Q, N) score block AFTER the
 integer-valued dot product instead of scaling all N*D elements first
 (one multiply per score, not per element — equal to dequantize-then-score
 up to a single f32 rounding per score).
+
+PQ (fourth representation): ``emb`` is the (N, m) uint8 code matrix and
+``luts`` the per-query ADC tables (Q, m, 256) built ONCE per batch by
+``core.pq.pq_luts``.  A row's asymmetric inner-product score is
+``sum_j luts[q, j, emb[r, j]]`` — m gathers + adds, never touching the
+codebook or a decoded fp32 row.  Equal to decode-then-score up to f32
+summation order (each term IS the exact subspace inner product).
 """
 from __future__ import annotations
 
@@ -69,10 +76,28 @@ def lex_topk(masked: jax.Array, virt: jax.Array, k: int):
     return jnp.take_along_axis(masked, rows, axis=1), rows
 
 
+def pq_adc_scores(codes: jax.Array, luts: jax.Array) -> jax.Array:
+    """Asymmetric-distance scores from PQ codes: codes (N, m) integer,
+    luts (Q, m, 256) f32 -> (Q, N) f32 with
+    ``out[q, r] = sum_j luts[q, j, codes[r, j]]``."""
+    codes = codes.astype(jnp.int32)
+    m = codes.shape[1]
+    nq, n = luts.shape[0], codes.shape[0]
+
+    def body(j, acc):
+        lut_j = jax.lax.dynamic_index_in_dim(luts, j, 1, keepdims=False)
+        c_j = jax.lax.dynamic_index_in_dim(codes, j, 1, keepdims=False)
+        return acc + jnp.take(lut_j, c_j, axis=1)        # gather (Q, N)
+
+    return jax.lax.fori_loop(0, m, body, jnp.zeros((nq, n), jnp.float32))
+
+
 def slab_topk_ref(emb: jax.Array, queries: jax.Array, virt: jax.Array,
-                  k: int, scales: Optional[jax.Array] = None):
-    """emb (N, D) f32/f16/int8; queries (Q, D) f32; virt (Q, N) int32;
-    scales (N, 1) f32 per-row (int8 slabs) or None.
+                  k: int, scales: Optional[jax.Array] = None,
+                  luts: Optional[jax.Array] = None):
+    """emb (N, D) f32/f16/int8 — or (N, m) uint8 PQ codes when ``luts``
+    (Q, m, 256) is given; queries (Q, D) f32; virt (Q, N) int32; scales
+    (N, 1) f32 per-row (int8 slabs) or None.
 
     Returns (vals (Q, k) f32, rows (Q, k) int32): the best k slab rows per
     query by (score desc, virt asc).  Lanes beyond a query's candidate
@@ -80,8 +105,11 @@ def slab_topk_ref(emb: jax.Array, queries: jax.Array, virt: jax.Array,
     callers mask by the per-query valid count.  Requires k <= N (dispatch
     clamps).
     """
-    scores = queries.astype(jnp.float32) @ emb.astype(jnp.float32).T  # (Q, N)
-    if scales is not None:
-        scores = scores * scales.astype(jnp.float32)[:, 0][None, :]
+    if luts is not None:
+        scores = pq_adc_scores(emb, luts.astype(jnp.float32))
+    else:
+        scores = queries.astype(jnp.float32) @ emb.astype(jnp.float32).T
+        if scales is not None:
+            scores = scores * scales.astype(jnp.float32)[:, 0][None, :]
     masked = jnp.where(virt < NOT_PROBED, scores, NEG_INF)
     return lex_topk(masked, virt, k)

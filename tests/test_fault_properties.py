@@ -66,7 +66,7 @@ def test_truncation_detected_and_recovered(codec, n, drop, seed):
     s.put(0, emb)
     clean = s.get(0)
     stored = s._mem[0]
-    name = "q" if "q" in stored else "emb"
+    name = next(k for k in ("q", "codes", "emb") if k in stored)
     stored[name] = np.array(stored[name][:-min(drop, n - 1)], copy=True)
     assert s.get_many([0]) == [None]
     assert s.io_stats["exhausted"] == 1

@@ -334,10 +334,12 @@ def test_update_unknown_chunk_is_noop():
 # ---------------------------------------------------------------------------
 # crash-safe disk put
 # ---------------------------------------------------------------------------
-def test_put_is_atomic_under_crash(tmp_path, monkeypatch):
-    s = StorageBackend("disk", root=str(tmp_path))
+@pytest.mark.parametrize("mode,codec", [("disk", "fp32"), ("memmap", "pq")])
+def test_put_is_atomic_under_crash(mode, codec, tmp_path, monkeypatch):
+    s = StorageBackend(mode, root=str(tmp_path), codec=codec)
     emb = _emb()
     s.put(1, emb)
+    clean = np.array(s.get(1), copy=True)
 
     def boom(src, dst):
         raise OSError("simulated crash mid-replace")
@@ -347,8 +349,75 @@ def test_put_is_atomic_under_crash(tmp_path, monkeypatch):
         s.put(1, _emb(seed=9))
     monkeypatch.undo()
     # the old payload survives intact and no temp file is left behind
-    assert np.array_equal(s.get(1), emb)
+    assert np.array_equal(s.get(1), clean)
     assert not any(f.endswith(".tmp") for f in os.listdir(str(tmp_path)))
+
+
+# ---------------------------------------------------------------------------
+# memmap PQ tier: on-disk rot is caught, quarantined, and self-healed
+# ---------------------------------------------------------------------------
+def _flip_code_bit(s: StorageBackend, key: int, rng):
+    """Flip one bit INSIDE the codes member's mapped extent of the stored
+    npz — precisely the bytes ``np.memmap`` scoring would read."""
+    mm = s.get_many_raw([key])[0]["codes"]
+    assert isinstance(mm, np.memmap)
+    pos = int(mm.offset) + int(rng.integers(mm.size))
+    path = s._path(key)
+    del mm
+    with open(path, "r+b") as f:
+        f.seek(pos)
+        b = f.read(1)[0]
+        f.seek(pos)
+        f.write(bytes([b ^ (1 << int(rng.integers(8)))]))
+
+
+@pytest.mark.parametrize("kind", ["flip", "truncate"])
+def test_memmap_pq_rot_detected_and_reput(kind, tmp_path):
+    """Storage level: seeded bit-flip / truncation of a memmap PQ payload
+    file is caught (CRC for flips, unreadable container for truncation),
+    the blob quarantine-drops, and a re-put restores exact reads."""
+    s = StorageBackend("memmap", root=str(tmp_path), codec="pq",
+                       retry_limit=1)
+    emb = _emb(n=30, seed=4)
+    s.put(1, emb)
+    clean = np.array(s.get(1), copy=True)
+    if kind == "flip":
+        _flip_code_bit(s, 1, np.random.default_rng(0))
+    else:
+        with open(s._path(1), "r+b") as f:
+            f.truncate(os.path.getsize(s._path(1)) // 2)
+    with pytest.raises(KeyError):
+        s.get(1)
+    assert s.io_stats["corrupt_dropped"] == 1
+    assert 1 not in s
+    assert not os.path.exists(s._path(1))        # quarantine deleted the rot
+    s.put(1, emb)                                # the resolver's self-heal
+    assert np.array_equal(s.get(1), clean)       # same codebook: exact codes
+
+
+def test_memmap_pq_search_self_heals_exactly(ds):
+    """End to end: rot one stored cluster of a memmap pq index; the next
+    search detects it mid-batch, regenerates the cluster, re-puts it under
+    the same codebook — and the search AFTER that scores codes again with
+    results identical to the pre-corruption search."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as root:
+        st = StorageBackend("memmap", root=root, codec="pq", retry_limit=0)
+        er = _fresh(ds, storage=st, cache_bytes=0)
+        q = ds.query_embs[:6]
+        ids0, vals0, _ = er.search_batch(q, 10, 4)
+        victim = st.keys()[0]
+        _flip_code_bit(st, victim, np.random.default_rng(1))
+        ids1, _, lats1 = er.search_batch(q, 10, 4)
+        assert st.io_stats["corrupt_dropped"] == 1
+        assert sum(l.n_generated for l in lats1) >= 1    # regen self-heal
+        assert (ids1 >= 0).any()
+        assert victim in st                              # re-put happened
+        assert er.clusters[victim].storage_fresh
+        ids2, vals2, lats2 = er.search_batch(q, 10, 4)
+        assert sum(l.n_generated for l in lats2) == 0    # healed: no regen
+        assert np.array_equal(ids2, ids0)                # exact results
+        assert np.array_equal(vals2, vals0)
 
 
 # ---------------------------------------------------------------------------

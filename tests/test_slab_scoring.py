@@ -1,9 +1,11 @@
 """Packed-slab batch scoring engine: fp32 bitwise parity vs the sequential
 per-query concat loop across the Table-4 configs (incl. empty probe lists
 and merged-away clusters), fp16/int8 fused-dequant parity vs
-dequant-then-score, slab layout structure, the raw-codec get_many contract,
-the ragged multi-query Pallas kernel vs its jnp oracle, and the lazy-decay
-LFU cache vs an eager reference."""
+dequant-then-score, PQ LUT-scoring differentials (ref + Pallas vs
+decode-then-exact, mixed four-representation slabs vs per-segment merge),
+slab layout structure, the raw-codec get_many contract, the ragged
+multi-query Pallas kernel vs its jnp oracle, and the lazy-decay LFU cache
+vs an eager reference."""
 import numpy as np
 import pytest
 
@@ -201,7 +203,7 @@ def test_slab_layout_packs_each_cluster_once(ds):
             for c in plan.owner))
 
 
-@pytest.mark.parametrize("codec", ["fp32", "fp16", "int8"])
+@pytest.mark.parametrize("codec", ["fp32", "fp16", "int8", "pq"])
 def test_get_many_raw_contract(ds, codec):
     """get_many_raw returns undecoded codec payloads in key order with
     None for missing keys; decode() reproduces get()."""
@@ -216,6 +218,9 @@ def test_get_many_raw_contract(ds, codec):
             assert set(payload) == {"q", "scale"}
             assert payload["q"].dtype == np.int8
             assert payload["scale"].dtype == np.float16
+        elif codec == "pq":
+            assert set(payload) == {"codes", "cbv"}
+            assert payload["codes"].dtype == np.uint8
         else:
             assert set(payload) == {"emb"}
             assert payload["emb"].dtype == (
@@ -223,8 +228,8 @@ def test_get_many_raw_contract(ds, codec):
         assert er.storage.payload_rows(payload) == er.clusters[key].size
         assert np.array_equal(er.storage.decode(payload),
                               er.storage.get(key))
-        kind = {"fp32": "fp32", "fp16": "fp16", "int8": "int8"}[codec]
-        assert SlabPayload.from_raw(payload).kind == kind
+        cb = er.storage.pq if codec == "pq" else None
+        assert SlabPayload.from_raw(payload, cb).kind == codec
 
 
 # ---------------------------------------------------------------------------
@@ -300,6 +305,138 @@ def test_slab_ref_equals_concat_topk_oracle():
         kk = len(rv)
         assert np.array_equal(vals[q][:kk], rv)
         assert np.array_equal(rows[q][:kk], order[ri])
+
+
+# ---------------------------------------------------------------------------
+# PQ LUT scoring differentials (core/pq.py + the kernels' fourth
+# representation)
+# ---------------------------------------------------------------------------
+def test_pq_lut_scoring_matches_decode_then_exact(ds):
+    """PQ ADC scoring (ref AND Pallas) over a clustered slab: Pallas is
+    bit-identical to the ref path, both agree with decode-then-fp32-exact
+    scoring of the same codes to fp32 tolerance, and the selected rows
+    overlap the TRUE fp32 top-k by >= 0.9 per query."""
+    from repro.core.pq import pq_decode, pq_encode, pq_luts, train_pq
+    emb = ds.embeddings.astype(np.float32)
+    cb = train_pq(emb, m=16, iters=10, seed=3)
+    codes = pq_encode(cb, emb)
+    n, nq, k = emb.shape[0], 12, 10
+    rng = np.random.default_rng(7)
+    virt = _random_slab_membership(rng, n, nq)
+    qs = ds.query_embs[:nq]
+    luts = pq_luts(cb, qs)
+    rv, rr = map(np.asarray, slab_topk(codes, qs, virt, k,
+                                       luts=luts, impl="ref"))
+    pv, pr = map(np.asarray, slab_topk_pallas(codes, qs, virt, k,
+                                              None, luts, interpret=True))
+    dv, dr = map(np.asarray,
+                 slab_topk_ref(pq_decode(cb, codes), qs, virt, k))
+    ev, er = map(np.asarray, slab_topk_ref(emb, qs, virt, k))
+    valid = rv > -1e29
+    assert (pv[~valid] <= -1e29).all()
+    # Pallas one-hot-matmul gather == jnp take gather, bitwise
+    assert np.array_equal(pr[valid], rr[valid])
+    assert np.array_equal(pv[valid], rv[valid])
+    # LUT accumulate == decode-then-dot on the same codes, fp32 tolerance
+    np.testing.assert_allclose(rv[valid], dv[valid], atol=2e-5)
+    assert np.array_equal(rr[valid], dr[valid])
+    # clustered data: PQ top-k tracks the unquantized fp32 top-k
+    for q in range(nq):
+        truth = set(er[q][ev[q] > -1e29].tolist())
+        if truth:
+            got = set(rr[q][rv[q] > -1e29].tolist())
+            assert len(got & truth) / len(truth) >= 0.9
+
+
+def test_mixed_four_representation_slab_matches_per_segment_merge(ds):
+    """A synthetic slab holding all FOUR representations at once: the
+    engine's fused multi-segment scoring (slab_score_topk) is bit-identical
+    to scoring each representation's segment separately and merging the
+    candidates under the (score desc, virt asc) order."""
+    from repro.core.edgerag import slab_score_topk
+    from repro.core.pq import pq_encode, pq_luts, train_pq
+    from repro.core.resolver import SlabLayout
+    emb = ds.embeddings.astype(np.float32)
+    cb = train_pq(emb, m=16, iters=8, seed=5)
+    n, nq, k, dim = emb.shape[0], 10, 9, emb.shape[1]
+    rng = np.random.default_rng(21)
+    bounds = [0, *np.sort(rng.choice(np.arange(1, n), 7,
+                                     replace=False)).tolist(), n]
+    kinds = ["fp32", "fp16", "int8", "pq", "pq", "int8", "fp16", "fp32"]
+    payloads, ids_of_map = {}, {}
+    for cid, kind in enumerate(kinds):
+        rows = emb[bounds[cid]:bounds[cid + 1]]
+        ids_of_map[cid] = np.arange(bounds[cid], bounds[cid + 1], dtype=np.int64)
+        if kind == "fp32":
+            payloads[cid] = SlabPayload("fp32", rows)
+        elif kind == "fp16":
+            payloads[cid] = SlabPayload("fp16", rows.astype(np.float16))
+        elif kind == "int8":
+            q8, sc = quantize_rows(rows)
+            payloads[cid] = SlabPayload("int8", q8,
+                                        sc.astype(np.float32))
+        else:
+            payloads[cid] = SlabPayload("pq", pq_encode(cb, rows),
+                                        codebook=cb)
+    order = list(range(len(kinds)))
+    slab = SlabLayout.pack(dim, order, payloads, lambda c: ids_of_map[c])
+    assert sorted(seg.kind for seg in slab.segments) == \
+        ["fp16", "fp32", "int8", "pq"]
+    probed = [list(rng.permutation(len(kinds))[:int(rng.integers(1, 7))])
+              for _ in range(nq)]
+    qs = ds.query_embs[:nq]
+    got_ids, got_vals, n_valid = slab_score_topk(slab, qs, k, probed)
+    # reference: one kernel launch PER representation, then an independent
+    # lexsort merge of the per-segment candidates
+    virts, ref_n_valid, n_valid_seg = slab.query_layout(probed)
+    cv, ct, ci = [], [], []
+    lane = np.arange(k)[None, :]
+    for seg in slab.segments:
+        luts = pq_luts(seg.codebook, qs) if seg.kind == "pq" else None
+        vals, rows = map(np.asarray, slab_topk(
+            seg.emb, qs, virts[seg.kind], k, scales=seg.scales, luts=luts))
+        ok = lane < n_valid_seg[seg.kind][:, None]
+        rows = np.where(ok, rows, 0)
+        cv.append(np.where(ok, vals, -np.inf))
+        ci.append(np.where(ok, seg.ids[rows], -1))
+        ct.append(np.where(ok, virts[seg.kind][np.arange(nq)[:, None], rows],
+                           np.int32(NOT_PROBED)))
+    cv, ct, ci = (np.concatenate(a, axis=1) for a in (cv, ct, ci))
+    merge = np.lexsort((ct, -cv), axis=1)[:, :k]
+    ref_vals = np.take_along_axis(cv, merge, axis=1)
+    ref_ids = np.take_along_axis(ci, merge, axis=1)
+    assert np.array_equal(got_vals, ref_vals)
+    assert np.array_equal(got_ids, ref_ids)
+    assert np.array_equal(n_valid, ref_n_valid)
+
+
+def test_mixed_pq_and_fp32_batch_matches_per_query_loop(ds):
+    """End-to-end mid-SLO pq-codec index: the batch slab mixes pq storage
+    segments with fp32 regen/cache segments; results match the per-query
+    decode-then-score loop within PQ tolerance on the scores it can
+    reproduce (both paths decode the SAME codes, so ids track wherever the
+    score order is pinned)."""
+    nq = 12
+    kw = dict(slo_s=0.1, store_heavy=True, cache_bytes=1 << 20,
+              storage_codec="pq")
+    slab_er = _fresh(ds, **kw)
+    plan = slab_er.plan_batch(ds.query_embs[:nq], 5)
+    lats = [LatencyBreakdown() for _ in range(nq)]
+    probe_slab = slab_er.resolver.execute_slab(plan, lats, [False] * nq)
+    kinds = sorted(seg.kind for seg in probe_slab.segments)
+    assert kinds == ["fp32", "pq"], kinds
+    slab_er = _fresh(ds, **kw)
+    loop_er = _fresh(ds, **kw)
+    s_ids, s_vals, lats = slab_er.search_batch(ds.query_embs[:nq], 10, 5)
+    l_ids, l_vals = _per_query_loop(loop_er, ds.query_embs[:nq], 10, 5)
+    np.testing.assert_allclose(s_vals, l_vals, atol=2e-5, rtol=1e-5)
+    overlap = np.mean([len(set(s_ids[q]) & set(l_ids[q])) / 10
+                       for q in range(nq)])
+    assert overlap >= 0.9
+    # pq cost fields charged; dequant fields untouched by pq segments
+    assert sum(l.l2_pq_lut_s for l in lats) > 0
+    assert sum(l.l2_pq_gather_s for l in lats) > 0
+    assert sum(l.l2_fused_dequant_s for l in lats) == 0
 
 
 # ---------------------------------------------------------------------------
