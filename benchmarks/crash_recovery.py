@@ -1,0 +1,309 @@
+"""Crash-recovery benchmark: what snapshot + WAL durability costs at
+steady state and what it buys at recovery time (core/durability.py
+exercised end to end).
+
+Three questions, one seeded run each:
+
+  1. WAL overhead      the same mixed query/churn stream replayed on two
+                       disk-backed indexes that differ ONLY in an attached
+                       Durability handle (checkpoint_every=64).  Overhead
+                       is the modeled edge seconds the WAL adds (fsyncs +
+                       inline snapshots) as a fraction of the baseline
+                       stream cost -> steady-state QPS ratio.
+  2. recovery speedup  after the churn, the durable index "crashes" (the
+                       process object is dropped).  ``recover()`` rebuilds
+                       it from newest snapshot + WAL suffix; its modeled
+                       edge seconds are compared against the cold path —
+                       re-embedding every live chunk from text (the only
+                       alternative on an edge device with no durable
+                       index).  Cold cost is an UNDERestimate (no k-means,
+                       no re-store), so the reported speedup is a floor.
+  3. crashpoint arms   one small index per :data:`CRASH_POINTS` boundary,
+                       killed at its 2nd occurrence mid-churn, recovered,
+                       and checked against independently rebuilt reference
+                       states: recovery must land on a clean op-sequence
+                       prefix (pre-op or post-op), NEVER a hybrid.
+
+Acceptance (criteria block): post-recovery answers BIT-IDENTICAL to
+pre-crash (recall@10 ratio == 1.0 and identical result ids), recovery
+>= 5x cheaper than the cold re-embed, WAL steady-state overhead <= 10%,
+and zero hybrid states across every crashpoint arm.
+
+``python -m benchmarks.crash_recovery [--out PATH] [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import os
+import shutil
+import tempfile
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import build_churn_ops, emit
+from repro.core import (CRASH_POINTS, CrashInjector, Durability,
+                        EdgeCostModel, EdgeRAGIndex, SimulatedCrash, recover)
+from repro.data import generate_dataset
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_crash_recovery.json")
+
+DIM = 48
+K = 10
+NPROBE = 6
+CHECKPOINT_EVERY = 64
+
+
+def _fresh_index(ds, cost, root, *, nlist: int, slo_s: float,
+                 mode: str = "disk") -> EdgeRAGIndex:
+    er = EdgeRAGIndex(DIM, ds.embedder, ds.get_chunks, cost, slo_s=slo_s,
+                      storage_mode=mode, storage_root=root,
+                      merge_min_size=2, maintenance="sync")
+    er.build(ds.chunk_ids, ds.texts, nlist=nlist, embeddings=ds.embeddings,
+             seed=1)
+    return er
+
+
+def op_edge_s(er, ds, cost, op) -> float:
+    """Apply one op; modeled edge seconds (same accounting as the
+    fault-tolerance benchmark's serve_op)."""
+    if op[0] == "query":
+        _, _, lat = er.search(ds.query_embs[op[1]], K, NPROBE)
+        return lat.retrieval_s
+    if op[0] == "insert":
+        er.insert(op[1], op[2])
+        return (cost.embed_latency(len(op[2]))
+                + cost.search_latency(er.nlist, DIM))
+    if op[0] == "update":
+        er.update(op[1], op[2])
+        return cost.embed_latency(len(op[2]))
+    er.remove(op[1])
+    return cost.search_latency(er.nlist, DIM)
+
+
+def recall_at_k(er, ds, live: set) -> float:
+    ids, _, _ = er.search_batch(ds.query_embs, K, NPROBE)
+    hits = 0
+    for qi in range(len(ds.query_embs)):
+        hits += len(set(int(i) for i in ids[qi] if i >= 0)
+                    & (ds.relevant(qi) & live))
+    return hits / (len(ds.query_embs) * K)
+
+
+def cold_rebuild_edge_s(er, ds, cost) -> float:
+    """Modeled edge cost of the durability-free alternative: re-embed
+    every live chunk from its text.  Deliberately omits k-means and blob
+    re-stores — an UNDERestimate, so speedup claims stay conservative."""
+    live = sorted(set(er._chunk_cluster))
+    return float(sum(cost.embed_latency(len(t))
+                     for t in ds.get_chunks(live)))
+
+
+# ---------------------------------------------------------------- arms
+def run_overhead_and_recovery(ds, ops, cost, *, nlist: int, slo_s: float,
+                              quick: bool) -> Dict:
+    base_root = tempfile.mkdtemp(prefix="bench_crash_base_")
+    wal_root = tempfile.mkdtemp(prefix="bench_crash_wal_")
+    try:
+        # --- baseline arm: identical stream, no durability
+        er = _fresh_index(ds, cost, base_root, nlist=nlist, slo_s=slo_s)
+        edge_base = sum(op_edge_s(er, ds, cost, op) for op in ops)
+        del er
+        gc.collect()
+
+        # --- WAL arm: one Durability handle is the only difference
+        er = _fresh_index(ds, cost, wal_root, nlist=nlist, slo_s=slo_s)
+        dur = er.attach_durability(Durability(
+            wal_root, cost_model=cost, checkpoint_every=CHECKPOINT_EVERY))
+        fsync0 = dur.fsync_edge_s_total          # exclude the baseline snap
+        edge_wal_ops = sum(op_edge_s(er, ds, cost, op) for op in ops)
+        wal_edge_s = dur.fsync_edge_s_total - fsync0
+        overhead = wal_edge_s / max(edge_base, 1e-12)
+        wal_stats = dur.stats()
+
+        # --- pre-crash ground truth, then the crash
+        live = set(er._chunk_cluster)
+        pre_ids, pre_vals, _ = er.search_batch(ds.query_embs, K, NPROBE)
+        pre_recall = recall_at_k(er, ds, live)
+        cold_edge = cold_rebuild_edge_s(er, ds, cost)
+        del er, dur
+        gc.collect()
+
+        # --- recovery
+        er2, report = recover(wal_root, ds.embedder, ds.get_chunks, cost,
+                              storage_mode="disk", slo_s=slo_s,
+                              maintenance="sync",
+                              checkpoint_every=CHECKPOINT_EVERY)
+        post_ids, post_vals, _ = er2.search_batch(ds.query_embs, K, NPROBE)
+        post_recall = recall_at_k(er2, ds, set(er2._chunk_cluster))
+        identical = (np.array_equal(post_ids, pre_ids)
+                     and np.array_equal(post_vals, pre_vals))
+        speedup = cold_edge / max(report.edge_s, 1e-12)
+        del er2
+        gc.collect()
+        return {
+            "n_ops": len(ops),
+            "edge_s_baseline": edge_base,
+            "edge_s_wal_stream": edge_wal_ops,
+            "wal_edge_s": wal_edge_s,
+            "wal_overhead_frac": overhead,
+            "qps_baseline": len(ops) / edge_base,
+            "qps_wal": len(ops) / (edge_base + wal_edge_s),
+            "wal_stats": wal_stats,
+            "recall_at10_pre_crash": pre_recall,
+            "recall_at10_post_recovery": post_recall,
+            "recall_ratio": post_recall / max(pre_recall, 1e-12),
+            "results_identical": bool(identical),
+            "recovery": report.as_dict(),
+            "cold_rebuild_edge_s": cold_edge,
+            "recovery_speedup_vs_cold": speedup,
+        }
+    finally:
+        shutil.rmtree(base_root, ignore_errors=True)
+        shutil.rmtree(wal_root, ignore_errors=True)
+
+
+def _membership_sig(er) -> Tuple:
+    return (
+        tuple(sorted(int(i) for c in er.clusters if c.active
+                     for i in c.ids)),
+        tuple((tuple(int(i) for i in c.ids), c.char_count, c.active)
+              for c in er.clusters),
+    )
+
+
+def run_crashpoint_arms(cost, quick: bool) -> Dict[str, Dict]:
+    """Kill one small durable index at every crashpoint boundary; recovery
+    must land on a clean prefix of the op sequence."""
+    ds = generate_dataset(n_records=150, dim=DIM, n_topics=6, n_queries=4,
+                          seed=29)
+    rng = np.random.default_rng(31)
+    ops = build_churn_ops(ds, rng, DIM, n_insert=4, n_remove=3, n_update=2,
+                          n_query=0, first_new_id=2_000_000)
+    mean_chars = sum(len(t) for t in ds.texts) / 6
+    slo_s = cost.embed_latency(int(0.5 * mean_chars))
+
+    # reference: the index after every prefix, rebuilt without crashes
+    refs = []
+    for j in range(len(ops) + 1):
+        er = EdgeRAGIndex(DIM, ds.embedder, ds.get_chunks, cost, slo_s=slo_s,
+                          merge_min_size=2, maintenance="sync")
+        er.build(ds.chunk_ids, ds.texts, nlist=6,
+                 embeddings=ds.embeddings, seed=1)
+        for op in ops[:j]:
+            op_edge_s(er, ds, cost, op)
+        refs.append(_membership_sig(er))
+
+    arms: Dict[str, Dict] = {}
+    for point in CRASH_POINTS:
+        root = tempfile.mkdtemp(prefix=f"bench_crash_{point}_")
+        try:
+            crash = CrashInjector(point, at=2, seed=13)
+            er = _fresh_index(ds, cost, root, nlist=6, slo_s=slo_s)
+            er.attach_durability(Durability(root, cost_model=cost,
+                                            checkpoint_every=3,
+                                            crash=crash))
+            crashed_at = None
+            for j, op in enumerate(ops):
+                try:
+                    op_edge_s(er, ds, cost, op)
+                except SimulatedCrash:
+                    crashed_at = j
+                    break
+            del er
+            gc.collect()
+            er2, report = recover(root, ds.embedder, ds.get_chunks, cost,
+                                  storage_mode="disk", slo_s=slo_s,
+                                  maintenance="sync")
+            sig = _membership_sig(er2)
+            landed = [j for j, s in enumerate(refs) if s == sig]
+            hybrid = not landed or (
+                crashed_at is not None
+                and crashed_at not in landed
+                and crashed_at + 1 not in landed)
+            arms[point] = {
+                "crashed_at_op": crashed_at,
+                "landed_prefix": landed[0] if landed else None,
+                "hybrid": bool(hybrid),
+                "recovery": report.as_dict(),
+            }
+            del er2
+            gc.collect()
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+        a = arms[point]
+        emit(f"crash_recovery.point.{point}",
+             a["recovery"]["edge_s"] * 1e6,
+             f"crashed_at={a['crashed_at_op']} "
+             f"landed={a['landed_prefix']} hybrid={a['hybrid']}")
+    return arms
+
+
+def run(out_path: str = DEFAULT_OUT, quick: bool = False) -> Dict:
+    n_records = 400 if quick else 1200
+    nq = 16 if quick else 48
+    nlist = max(12, n_records // 30)
+    ds = generate_dataset(n_records=n_records, dim=DIM,
+                          n_topics=max(8, n_records // 60),
+                          n_queries=nq, seed=19)
+    cost = EdgeCostModel()
+    mean_cluster_chars = sum(len(t) for t in ds.texts) / nlist
+    slo_s = cost.embed_latency(int(0.5 * mean_cluster_chars))
+    rng = np.random.default_rng(41)
+    # the same ~70% query / 30% churn mix as the fault-tolerance benchmark
+    # (only churn ops pay a WAL fsync, so the mix sets the overhead)
+    n_churn = int(0.08 * n_records)
+    ops = build_churn_ops(ds, rng, DIM, n_insert=n_churn, n_remove=n_churn,
+                          n_update=n_churn, n_query=7 * n_churn)
+
+    main = run_overhead_and_recovery(ds, ops, cost, nlist=nlist,
+                                     slo_s=slo_s, quick=quick)
+    emit("crash_recovery.wal_overhead", main["wal_edge_s"] * 1e6,
+         f"overhead={main['wal_overhead_frac']*100:.2f}% "
+         f"records={main['wal_stats']['wal_records_total']} "
+         f"snaps={main['wal_stats']['snapshots_total']}")
+    emit("crash_recovery.recovery", main["recovery"]["edge_s"] * 1e6,
+         f"speedup_vs_cold={main['recovery_speedup_vs_cold']:.1f}x "
+         f"replayed={main['recovery']['replayed_records']} "
+         f"recall_ratio={main['recall_ratio']:.3f}")
+
+    arms = run_crashpoint_arms(cost, quick)
+
+    results = {
+        "n_records": n_records, "n_queries": nq, "nlist": nlist,
+        "k": K, "nprobe": NPROBE, "slo_s": slo_s,
+        "checkpoint_every": CHECKPOINT_EVERY,
+        "steady_state": main,
+        "crashpoints": arms,
+        "criteria": {
+            "recall_ratio_one": (main["recall_ratio"] == 1.0
+                                 and main["results_identical"]),
+            "recovery_speedup_ok": main["recovery_speedup_vs_cold"] >= 5.0,
+            "wal_overhead_ok": main["wal_overhead_frac"] <= 0.10,
+            "no_hybrid_state": all(not a["hybrid"] for a in arms.values()),
+            "all_crashpoints_fired": all(
+                a["crashed_at_op"] is not None for a in arms.values()),
+        },
+    }
+    ok = all(results["criteria"].values())
+    print(f"# recall ratio 1.0, recovery >= 5x cold re-embed, WAL overhead "
+          f"<= 10%, no hybrid crashpoint state: {'PASS' if ok else 'FAIL'}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {out_path}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(args.out, args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Crash-consistent durability quickstart: build an index, churn it with
+a write-ahead log attached, kill the "process" mid-flight, and recover —
+the recovered index answers bit-identically to the moment before the
+crash, without re-embedding the corpus.
+
+Walkthrough:
+  1. build a disk-backed EdgeRAG index and attach a Durability handle
+     (every insert/remove/update now appends one CRC-framed WAL record;
+     snapshots ride along every ``checkpoint_every`` records)
+  2. churn: inserts, removes, updates — then record reference answers
+  3. crash: drop the index object (simulated power cut; the WAL's torn
+     tail, if any, is truncated at recovery)
+  4. ``recover()``: newest valid snapshot + WAL-suffix replay, blob
+     reconciliation (orphan GC / self-heal), same answers back
+
+    PYTHONPATH=src python examples/crash_recovery_quickstart.py
+
+Runs in well under 30 seconds on a laptop.
+"""
+import gc
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import Durability, EdgeCostModel, EdgeRAGIndex, recover
+from repro.data import generate_dataset
+
+K, NPROBE = 8, 6
+
+
+def main():
+    t_start = time.perf_counter()
+    ds = generate_dataset(n_records=600, dim=32, n_topics=12, n_queries=6,
+                          seed=3)
+    cost = EdgeCostModel()
+    root = tempfile.mkdtemp(prefix="edgerag_durable_")
+    try:
+        # 1. durable disk-backed index
+        index = EdgeRAGIndex(32, ds.embedder, ds.get_chunks, cost,
+                             slo_s=0.01, storage_mode="disk",
+                             storage_root=root, maintenance="sync")
+        index.build(ds.chunk_ids, ds.texts, nlist=20,
+                    embeddings=ds.embeddings)
+        dur = index.attach_durability(
+            Durability(root, cost_model=cost, checkpoint_every=8))
+        print(f"[build]   {index.stats()}")
+
+        # 2. churn under the WAL
+        for j in range(12):
+            ds.add_chunk(10_000 + j, f"fresh durable chunk {j} " * 12)
+            index.insert(10_000 + j, f"fresh durable chunk {j} " * 12)
+        for cid in ds.chunk_ids[:5]:
+            index.remove(int(cid))
+        ds.add_chunk(int(ds.chunk_ids[10]), "rewritten chunk " * 20)
+        index.update(int(ds.chunk_ids[10]), "rewritten chunk " * 20)
+        st = dur.stats()
+        print(f"[churn]   {st['wal_records_total']} WAL records, "
+              f"{st['snapshots_total']} snapshots, "
+              f"{st['wal_bytes']} WAL bytes on disk")
+        ref_ids, ref_vals, _ = index.search_batch(ds.query_embs, K, NPROBE)
+
+        # 3. crash: the process dies; only the disk survives
+        del index, dur
+        gc.collect()
+        print("[crash]   index object dropped (simulated power cut)")
+
+        # 4. recover from snapshot + WAL suffix
+        index2, report = recover(root, ds.embedder, ds.get_chunks, cost,
+                                 storage_mode="disk", slo_s=0.01,
+                                 maintenance="sync")
+        print(f"[recover] snapshot lsn={report.snapshot_lsn}, "
+              f"replayed={report.replayed_records} records, "
+              f"healed={report.healed}, orphans_gc={report.orphans_gc}, "
+              f"modeled edge cost {report.edge_s*1e3:.1f} ms "
+              f"({report.wall_s*1e3:.1f} ms wall)")
+
+        ids, vals, _ = index2.search_batch(ds.query_embs, K, NPROBE)
+        assert np.array_equal(ids, ref_ids), "ids drifted after recovery"
+        assert np.array_equal(vals, ref_vals), "scores drifted after recovery"
+        cold_s = sum(cost.embed_latency(len(t)) for t in ds.get_chunks(
+            sorted(set(index2._chunk_cluster))))
+        print(f"[verify]  answers bit-identical to pre-crash; recovery was "
+              f"{cold_s / max(report.edge_s, 1e-12):.0f}x cheaper than "
+              f"re-embedding the corpus "
+              f"({time.perf_counter() - t_start:.1f}s total)")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,11 @@
 # slower than per-tenant silos or multi-tenancy perturbs single-tenant
 # results bitwise; pass pq-smoke for a quick-scale disk-native PQ memmap
 # tier run that fails if PQ recall drops below 0.95 of fp32, PQ bytes
-# reach the int8 tier, or the byte reduction falls under 8x.
+# reach the int8 tier, or the byte reduction falls under 8x; pass
+# durability-smoke for a quick-scale crash-recovery run that fails if
+# post-recovery recall is not exactly 1.0x pre-crash, recovery is slower
+# than the cold re-embed rebuild, the WAL steady-state overhead tops 10%,
+# or any crashpoint arm leaves a hybrid (neither-pre-nor-post-op) state.
 #   scripts/ci.sh                 -> pytest -m "not slow"
 #   scripts/ci.sh --full          -> full suite
 #   scripts/ci.sh bench-smoke     -> quick benchmarks + BENCH_*.json key check
@@ -20,6 +24,7 @@
 #   scripts/ci.sh pipeline-smoke  -> quick pipeline-throughput bench + checks
 #   scripts/ci.sh tenant-smoke    -> quick multi-tenant bench + schema check
 #   scripts/ci.sh pq-smoke        -> quick pq memmap-tier bench + schema check
+#   scripts/ci.sh durability-smoke -> quick crash-recovery bench + checks
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -258,10 +263,53 @@ assert pq["reduction_vs_fp32"] >= 8.0, \
 print(f"pq-smoke OK: {pq['recall_ratio_vs_fp32']:.3f}x recall of fp32 at "
       f"{pq['reduction_vs_fp32']:.1f}x fewer bytes from memmap slabs")
 PY
+elif [[ "${1:-}" == "durability-smoke" ]]; then
+    out="$(mktemp -d)"
+    trap 'rm -rf "$out"' EXIT
+    python -m benchmarks.crash_recovery --quick \
+        --out "$out/BENCH_crash_recovery.json"
+    python - "$out" <<'PY'
+import json, os, sys
+
+c = json.load(open(os.path.join(sys.argv[1], "BENCH_crash_recovery.json")))
+for key in ("n_records", "n_queries", "nlist", "k", "nprobe", "slo_s",
+            "checkpoint_every", "steady_state", "crashpoints", "criteria"):
+    assert key in c, f"BENCH_crash_recovery.json missing key: {key}"
+s = c["steady_state"]
+for key in ("n_ops", "edge_s_baseline", "wal_edge_s", "wal_overhead_frac",
+            "qps_baseline", "qps_wal", "wal_stats", "recall_at10_pre_crash",
+            "recall_at10_post_recovery", "recall_ratio", "results_identical",
+            "recovery", "cold_rebuild_edge_s", "recovery_speedup_vs_cold"):
+    assert key in s, f"steady_state block missing key: {key}"
+for key in ("snapshot_lsn", "replayed_records", "torn_bytes", "orphans_gc",
+            "healed", "edge_s", "wall_s"):
+    assert key in s["recovery"], f"recovery block missing key: {key}"
+assert c["crashpoints"], "no crashpoint arms ran"
+for point, arm in c["crashpoints"].items():
+    for key in ("crashed_at_op", "landed_prefix", "hybrid", "recovery"):
+        assert key in arm, f"crashpoint {point} missing key: {key}"
+    assert arm["crashed_at_op"] is not None, \
+        f"crashpoint {point} never fired"
+    # the atomicity contract: pre-op or post-op, never a torn hybrid
+    assert not arm["hybrid"], \
+        f"crashpoint {point} left a hybrid recovered state"
+assert s["recall_ratio"] == 1.0 and s["results_identical"], \
+    f"post-recovery answers drifted (ratio {s['recall_ratio']:.3f})"
+# at quick scale recovery must at LEAST beat the cold re-embed; the >=5x
+# target is recorded (and met) in the repo-root BENCH_crash_recovery.json
+assert s["recovery_speedup_vs_cold"] >= 1.0, \
+    f"recovery slower than cold rebuild ({s['recovery_speedup_vs_cold']:.2f}x)"
+assert s["wal_overhead_frac"] <= 0.10, \
+    f"WAL steady-state overhead hit {s['wal_overhead_frac']:.1%} (> 10%)"
+print(f"durability-smoke OK: {s['recovery_speedup_vs_cold']:.1f}x faster "
+      f"than cold rebuild at {s['wal_overhead_frac']:.1%} WAL overhead, "
+      f"answers identical, no hybrid states")
+PY
 elif [[ -z "${1:-}" ]]; then
     python -m pytest -q -m "not slow"
 else
     echo "unknown lane: $1 (expected: no arg, --full, bench-smoke," \
-         "chaos-smoke, pipeline-smoke, tenant-smoke, or pq-smoke)" >&2
+         "chaos-smoke, pipeline-smoke, tenant-smoke, pq-smoke, or" \
+         "durability-smoke)" >&2
     exit 2
 fi

@@ -10,15 +10,20 @@ from repro.core.cache_policy import (CostAwareLFUCache,  # noqa
                                      MinLatencyThresholdController,
                                      TenantCacheView)
 from repro.core.costs import EdgeCostModel, LatencyBreakdown  # noqa
+from repro.core.durability import (Durability, IndexSnapshot,  # noqa
+                                   RecoveryError, RecoveryReport,
+                                   WriteAheadLog, recover, recover_index,
+                                   recover_router)
 from repro.core.edgerag import EdgeCluster, EdgeRAGIndex  # noqa
-from repro.core.faults import (CorruptPayloadError,  # noqa
-                               DegradationPolicy, FaultInjector, IOOutcome)
+from repro.core.faults import (CRASH_POINTS, CorruptPayloadError,  # noqa
+                               CrashInjector, DegradationPolicy,
+                               FaultInjector, IOOutcome, SimulatedCrash)
 from repro.core.flat_index import FlatIndex  # noqa
 from repro.core.ivf_index import IVFIndex  # noqa
 from repro.core.kmeans import kmeans  # noqa
-from repro.core.maintenance import (FairShareMaintenance,  # noqa
-                                    MaintenanceOp, MaintenanceReport,
-                                    MaintenanceScheduler)
+from repro.core.maintenance import (OP_CHECKPOINT,  # noqa
+                                    FairShareMaintenance, MaintenanceOp,
+                                    MaintenanceReport, MaintenanceScheduler)
 from repro.core.resolver import ClusterResolver, ResolutionPlan  # noqa
 from repro.core.storage import StorageBackend, TenantStorageView  # noqa
 from repro.core.tenant import (MultiTenantSearchState,  # noqa

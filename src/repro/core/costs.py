@@ -116,6 +116,14 @@ class EdgeCostModel:
         which re-copied every shared cluster once per probing query."""
         return 2.0 * n_bytes / self.dram_bw_bytes_per_sec
 
+    def wal_fsync_latency(self, n_bytes: int) -> float:
+        """Appending + fsyncing one WAL frame (or snapshot payload): a
+        flash write barrier (same order as a seek on SD-class media) plus
+        the frame streamed at sequential bandwidth.  Charged per durable
+        mutation when a ``Durability`` handle is attached
+        (core/durability.py)."""
+        return self.storage_seek_s + n_bytes / self.storage_seq_bw_bytes_per_sec
+
     def prefill_latency(self, n_tokens: int) -> float:
         return n_tokens / self.prefill_tokens_per_sec
 
@@ -145,6 +153,9 @@ class LatencyBreakdown:
     # failure model (core/faults.py) — zero on the fault-free path:
     l2_stall_s: float = 0.0             # injected storage stall tail (I/O)
     l2_retry_backoff_s: float = 0.0     # modeled retry exponential backoff
+    # durability (core/durability.py) — the WAL record a retrieval-path
+    # Alg. 1 self-heal re-persist emits; zero unless a handle is attached:
+    wal_fsync_s: float = 0.0
     wall_s: float = 0.0
     n_clusters_probed: int = 0
     n_generated: int = 0
@@ -164,7 +175,8 @@ class LatencyBreakdown:
     STAGE_FIELDS = {
         "plan": ("embed_query_s", "centroid_search_s"),
         "fetch": ("l2_generate_s", "l2_storage_load_s", "l2_dequant_s",
-                  "l2_cache_hit_s", "l2_stall_s", "l2_retry_backoff_s"),
+                  "l2_cache_hit_s", "l2_stall_s", "l2_retry_backoff_s",
+                  "wal_fsync_s"),
         "score": ("l2_slab_pack_s", "l2_fused_dequant_s", "l2_pq_lut_s",
                   "l2_pq_gather_s", "l2_mem_load_s", "l2_search_s"),
     }

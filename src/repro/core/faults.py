@@ -63,6 +63,23 @@ import numpy as np
 
 FAULT_KINDS = ("missing", "flip", "truncate", "io")
 
+# Durability write boundaries where a :class:`CrashInjector` can cut the
+# process (core/durability.py calls ``crash.hit(point)`` at each one).
+# WAL append:
+#   wal_pre_append    before any frame byte reaches the log (op lost whole)
+#   wal_torn_append   mid-append — a seeded prefix of the frame is written,
+#                     then the "power" goes: the torn tail recovery must
+#                     truncate
+#   wal_post_append   frame fully written + fsynced
+# Snapshot (atomic tmp + ``os.replace``):
+#   snap_pre_tmp      before the tmp file is opened
+#   snap_torn_tmp     mid-tmp-write — a truncated tmp is left behind
+#   snap_pre_rename   tmp complete, rename not issued
+#   snap_post_rename  snapshot durable (crash before WAL compaction)
+CRASH_POINTS = ("wal_pre_append", "wal_torn_append", "wal_post_append",
+                "snap_pre_tmp", "snap_torn_tmp", "snap_pre_rename",
+                "snap_post_rename")
+
 
 class InjectedFault(Exception):
     """Base of the injector-raised read failures."""
@@ -79,6 +96,72 @@ class TransientIOError(InjectedFault, IOError):
 class CorruptPayloadError(Exception):
     """Checksum mismatch (real torn/bit-rotted blob or injected corruption)
     — or an unreadable .npz container."""
+
+
+class SimulatedCrash(BaseException):
+    """Raised by :class:`CrashInjector` at a durability write boundary.
+
+    Deliberately a ``BaseException``: a crash is not an error the write
+    path may catch and clean up after — torn tmp files and half-written
+    frames must stay on disk exactly as a power loss would leave them, so
+    recovery code (not writer cleanup) is what gets exercised."""
+
+    def __init__(self, point: str):
+        super().__init__(point)
+        self.point = point
+
+
+class CrashInjector:
+    """Seeded process-death injection at durability write boundaries.
+
+    Crashes on the ``at``-th time execution reaches crashpoint ``point``
+    (one of :data:`CRASH_POINTS`); every other boundary passes through
+    untouched.  For the torn-write points (``wal_torn_append`` /
+    ``snap_torn_tmp``) the writer asks :meth:`torn_length` how many bytes
+    of the frame / tmp payload to emit before dying — drawn from the
+    injector's seeded generator, so the same (point, at, seed) triple
+    reproduces the identical torn file."""
+
+    def __init__(self, point: str, at: int = 1, seed: int = 0):
+        assert point in CRASH_POINTS, point
+        assert at >= 1, at
+        self.point = point
+        self.at = int(at)
+        self.rng = np.random.default_rng(seed)
+        self.hits: Dict[str, int] = {p: 0 for p in CRASH_POINTS}
+        self.crashed = False
+
+    def hit(self, point: str) -> None:
+        """Register reaching one boundary; raises :class:`SimulatedCrash`
+        when this is the configured occurrence."""
+        assert point in CRASH_POINTS, point
+        self.hits[point] += 1
+        if (not self.crashed and point == self.point
+                and self.hits[point] == self.at):
+            self.die(point)
+
+    def take(self, point: str) -> bool:
+        """Register reaching a TWO-PHASE (torn-write) boundary; True iff
+        this occurrence is the configured crash.  The writer then emits
+        its :meth:`torn_length` partial bytes and calls :meth:`die` — the
+        crash must land *after* the torn prefix hits disk, so this cannot
+        raise the way :meth:`hit` does."""
+        assert point in CRASH_POINTS, point
+        self.hits[point] += 1
+        return (not self.crashed and point == self.point
+                and self.hits[point] == self.at)
+
+    def die(self, point: str) -> None:
+        self.crashed = True
+        raise SimulatedCrash(point)
+
+    def torn_length(self, n_bytes: int) -> int:
+        """How many of a frame's ``n_bytes`` land before the torn crash:
+        uniform over [1, n_bytes) — never zero (that's the pre-append
+        point) and never complete (that's post-append)."""
+        if n_bytes <= 1:
+            return 0
+        return int(self.rng.integers(1, n_bytes))
 
 
 @dataclasses.dataclass

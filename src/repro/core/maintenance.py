@@ -46,6 +46,8 @@ OP_RESTORE = "restore"        # (re)generate + persist the storage copy
 OP_DROP_STORE = "drop_store"  # cluster became cheap: delete the stored copy
 OP_SPLIT = "split"            # one k=2 split level (follow-ups re-enqueue)
 OP_MERGE = "merge"            # fold an undersized cluster into its neighbor
+OP_CHECKPOINT = "checkpoint"  # durability snapshot + WAL compaction
+CHECKPOINT_CID = -1           # checkpoints are whole-index, not per-cluster
 
 
 @dataclasses.dataclass
@@ -108,7 +110,8 @@ class MaintenanceScheduler:
         self._failures.pop(key, None)
         self._queue.pop(key, None)      # refresh: move to the back
         self._queue[key] = MaintenanceOp(
-            kind, cid, self.index.clusters[cid].generation)
+            kind, cid,
+            0 if cid < 0 else self.index.clusters[cid].generation)
 
     def clear(self):
         """Drop every queued op (index rebuilds)."""
@@ -132,6 +135,8 @@ class MaintenanceScheduler:
         bandwidth (the cost model has no separate write channel); a split
         adds ~10 Lloyd iterations of 2-means over the cluster."""
         ix = self.index
+        if kind == OP_CHECKPOINT:
+            return ix.durability.checkpoint_cost_s(ix)
         cl = ix.clusters[cid]
         cost = ix.cost
         put_s = cost.storage_load_latency(cl.size * ix.dim * 4)
@@ -171,6 +176,14 @@ class MaintenanceScheduler:
         the restore at enqueue time, so the storage reconciliation it
         absorbed must not vanish with it)."""
         ix = self.index
+        if op.kind == OP_CHECKPOINT:
+            # still wanted iff a durability handle is attached and records
+            # accumulated since the last snapshot (another drain may have
+            # checkpointed already — then this one is free to skip)
+            if (ix.durability is not None
+                    and ix.durability.records_since_snapshot > 0):
+                return OP_CHECKPOINT
+            return None
         cl = ix.clusters[op.cid]
         if op.kind == OP_MERGE:
             if (cl.active and 0 < cl.size < ix.merge_min_size
@@ -197,8 +210,13 @@ class MaintenanceScheduler:
             return None if fresh else OP_RESTORE
         return OP_DROP_STORE if cl.stored else None
 
-    def _apply(self, kind: str, cid: int):
+    def _apply(self, kind: str, cid: int) -> float:
+        """Run one op; returns EXTRA edge seconds beyond the estimate —
+        the durability WAL fsync the op commits (zero with no handle)."""
         ix = self.index
+        if kind == OP_CHECKPOINT:
+            return ix.durability.checkpoint(ix) \
+                - self.estimate_cost_s(kind, cid)
         if kind == OP_RESTORE:
             ix._restore_cluster(cid)
         elif kind == OP_DROP_STORE:
@@ -215,6 +233,10 @@ class MaintenanceScheduler:
                     self.enqueue(OP_SPLIT, slot)    # budgeted follow-up
         elif kind == OP_MERGE:
             ix._merge_cluster(cid)
+        # commit the op's dirty set as one WAL record (no-op without a
+        # durability handle; getattr keeps bare index stubs drainable)
+        commit = getattr(ix, "_wal_commit", None)
+        return 0.0 if commit is None else commit(kind)
 
     def drain(self, budget_s: Optional[float] = None,
               strict: bool = False,
@@ -263,12 +285,12 @@ class MaintenanceScheduler:
                 break                      # budget spent (≥1 op ran unless strict)
             del self._queue[key]
             try:
-                self._apply(kind, op.cid)
+                extra_s = self._apply(kind, op.cid)
             except Exception as e:      # noqa: BLE001 — isolate the op
                 self._record_failure(key, op, e, report, failed_this_drain)
                 continue
             report.executed.append((kind, op.cid))
-            report.edge_s += est
+            report.edge_s += est + extra_s
             self.n_executed += 1
         report.remaining = len(self._queue)
         self.total_edge_s += report.edge_s

@@ -134,6 +134,9 @@ class StaleCodebookError(CorruptPayloadError):
 
 _CLUSTER_FILE = re.compile(r"^cluster_(\d+)\.npz$")
 _TENANT_DIR = re.compile(r"^tenant_([A-Za-z0-9._-]+)$")
+# tmp files OUR writers leave behind when a put/train dies mid-write —
+# the only .tmp names clear() is allowed to sweep (foreign files stay)
+_STALE_TMP = re.compile(r"^(cluster_\d+\.npz|pq_codebook\.npz)\.tmp$")
 _NAMESPACE_RE = re.compile(r"^[A-Za-z0-9._-]*$")
 _CHECKSUM_KEY = "crc"
 
@@ -175,6 +178,7 @@ class StorageBackend:
         self.pq: Optional[PQCodebook] = None
         self._mem: Dict[StorageKey, Dict[str, np.ndarray]] = {}
         self._nbytes: Dict[StorageKey, int] = {}    # stored payload bytes
+        self._crcs: Dict[StorageKey, int] = {}      # payload CRC at put time
         self.root: Optional[str] = None
         self._base: Optional[str] = None            # root[/namespace]
         if mode != "memory":
@@ -441,9 +445,9 @@ class StorageBackend:
             if used + nbytes > self.budget_bytes:
                 self.io_stats["put_rejected"] += 1
                 return 0
+        crc = payload_checksum(payload)
         stored = dict(payload)
-        stored[_CHECKSUM_KEY] = np.array([payload_checksum(payload)],
-                                         np.uint32)
+        stored[_CHECKSUM_KEY] = np.array([crc], np.uint32)
         if self.mode == "memory":
             self._mem[key] = stored
         else:
@@ -461,6 +465,7 @@ class StorageBackend:
                 raise
             nbytes = os.stat(path).st_size
         self._nbytes[key] = nbytes
+        self._crcs[key] = crc
         return self._nbytes[key]
 
     def get(self, key: int) -> np.ndarray:
@@ -501,18 +506,68 @@ class StorageBackend:
                 outcomes.append(o)
         return out
 
+    def payload_crc(self, key: StorageKey) -> int:
+        """CRC-32 of the stored payload, WITHOUT reading the payload data:
+        the ``"crc"`` member recorded at put time (cached per key; a fresh
+        instance on an old root lazily reads just that member from the
+        container).  Raises ``KeyError`` for an absent or unreadable blob.
+        This is what crash recovery (core/durability.py) compares against
+        the manifest's recorded checksum to detect a blob that was
+        replaced mid-op before the WAL record landed."""
+        if key in self._crcs:
+            return self._crcs[key]
+        if self.mode == "memory":
+            if key not in self._mem:
+                raise KeyError(key)
+            crc = int(np.asarray(
+                self._mem[key][_CHECKSUM_KEY]).reshape(-1)[0])
+        else:
+            try:
+                with np.load(self._path(key)) as z:
+                    crc = int(np.asarray(z[_CHECKSUM_KEY]).reshape(-1)[0])
+            except Exception:
+                raise KeyError(key)
+        self._crcs[key] = crc
+        return crc
+
     def delete(self, key: int):
         self._nbytes.pop(key, None)
+        self._crcs.pop(key, None)
         if self.mode == "memory":
             self._mem.pop(key, None)
-        elif os.path.exists(self._path(key)):
-            os.remove(self._path(key))
+            return
+        path = self._path(key)
+        if os.path.exists(path):
+            os.remove(path)
+        # a crashed put can strand its temp file next to the blob: sweep it
+        # so the directory never accumulates torn garbage
+        if os.path.exists(path + ".tmp"):
+            os.remove(path + ".tmp")
 
     def clear(self):
-        """Drop every stored cluster (index rebuilds)."""
+        """Drop every stored cluster (index rebuilds) — plus, on disk
+        roots, the persisted PQ codebook file and any stale ``.tmp`` files
+        a crashed put left behind, so a rebuild on this root never decodes
+        against a leftover codebook version or trips over torn garbage.
+        (The in-memory codebook is kept: a rebuild's ``train_pq`` bumps
+        its version, preserving the stale-blob invalidation semantics.)"""
         for key in self.keys():
             self.delete(key)
         self._nbytes.clear()
+        self._crcs.clear()
+        if self.mode == "memory":
+            return
+        cb_path = os.path.join(self._base, _CODEBOOK_FILE)
+        if os.path.exists(cb_path):
+            os.remove(cb_path)
+        dirs = [self._base] + [
+            os.path.join(self._base, e) for e in os.listdir(self._base)
+            if _TENANT_DIR.match(e)
+            and os.path.isdir(os.path.join(self._base, e))]
+        for d in dirs:
+            for f in os.listdir(d):
+                if _STALE_TMP.match(f):
+                    os.remove(os.path.join(d, f))
 
     def __contains__(self, key: StorageKey) -> bool:
         if self.mode == "memory":
@@ -664,6 +719,12 @@ class TenantStorageView:
     def stored_bytes(self, cid: int) -> int:
         try:
             return self.backend.stored_bytes(self._k(cid))
+        except KeyError:
+            raise KeyError(cid)
+
+    def payload_crc(self, cid: int) -> int:
+        try:
+            return self.backend.payload_crc(self._k(cid))
         except KeyError:
             raise KeyError(cid)
 

@@ -158,6 +158,7 @@ class TenantRouter:
         # pack_slab / stale_cids run against the router as if it were an
         # index: they only touch .dim / .cost / .clusters[key]
         self.resolver = ClusterResolver(self)
+        self._durability_cfg: Optional[Dict] = None
 
     # ------------------------------------------------------------------
     # tenant lifecycle
@@ -193,7 +194,47 @@ class TenantRouter:
             cache=TenantCacheView(self.cache, tenant_id))
         self.maintenance.register(tenant_id, ix.maintenance)
         self.tenants[tenant_id] = ix
+        if self._durability_cfg is not None:
+            self._attach_tenant_durability(tenant_id, checkpoint=False)
         return ix
+
+    # ------------------------------------------------------------------
+    # durability (core/durability.py)
+    # ------------------------------------------------------------------
+    def enable_durability(self, root: Optional[str] = None, *,
+                          checkpoint_every: int = 64,
+                          keep_snapshots: int = 2, checkpoint: bool = True):
+        """Make every tenant's index state crash-consistent: one
+        per-tenant namespaced WAL + snapshot directory
+        (``<root>/durability/tenant_<t>/``) under the SHARED storage root,
+        so one ``recover_router`` call restores the whole deployment.
+        Applies to existing tenants now and auto-attaches to tenants
+        created later.  ``root`` defaults to the shared backend's disk
+        root (required for memory-mode storage).  Returns the per-tenant
+        :class:`~repro.core.durability.Durability` handles."""
+        root = root or self.storage.root
+        assert root is not None, \
+            "durability needs a filesystem root: disk-backed storage or root="
+        self._durability_cfg = {"root": root,
+                                "checkpoint_every": checkpoint_every,
+                                "keep_snapshots": keep_snapshots}
+        return {t: self._attach_tenant_durability(
+                    t, checkpoint=checkpoint
+                    and self.tenants[t].centroids is not None)
+                for t in self.tenants}
+
+    def _attach_tenant_durability(self, tenant_id: str, *,
+                                  checkpoint: bool):
+        from repro.core.durability import Durability
+        cfg = self._durability_cfg
+        dur = Durability(cfg["root"], tenant=tenant_id,
+                         cost_model=self.cost,
+                         checkpoint_every=cfg["checkpoint_every"],
+                         keep_snapshots=cfg["keep_snapshots"])
+        # an unbuilt tenant checkpoints at build() time instead
+        self.tenants[tenant_id].attach_durability(dur,
+                                                  checkpoint=checkpoint)
+        return dur
 
     def tenant(self, tenant_id: str) -> EdgeRAGIndex:
         return self.tenants[tenant_id]

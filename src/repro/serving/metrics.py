@@ -272,6 +272,36 @@ def collect_pipeline_trace(reg: MetricsRegistry, trace) -> MetricsRegistry:
     return reg
 
 
+def collect_durability(reg: MetricsRegistry, durability,
+                       labels: Optional[Dict[str, str]] = None
+                       ) -> MetricsRegistry:
+    """Durability-subsystem state from one
+    :class:`~repro.core.durability.Durability` handle: WAL record/byte
+    counters, snapshot + compaction counters, and the last recovery's
+    wall seconds (0 until a recovery ran)."""
+    labels = labels or {}
+    st = durability.stats()
+    reg.counter("edgerag_wal_records_total",
+                "WAL records appended").inc(st["wal_records_total"],
+                                            labels=labels)
+    reg.gauge("edgerag_wal_bytes",
+              "Current WAL file bytes (post-compaction)"
+              ).set(st["wal_bytes"], labels=labels)
+    reg.counter("edgerag_snapshots_total",
+                "Index snapshots taken").inc(st["snapshots_total"],
+                                             labels=labels)
+    reg.counter("edgerag_wal_compactions_total",
+                "WAL compactions after snapshots"
+                ).inc(st["wal_compactions_total"], labels=labels)
+    reg.gauge("edgerag_wal_fsync_edge_seconds_total",
+              "Modeled edge seconds charged to WAL fsyncs + snapshots"
+              ).set(st["fsync_edge_s_total"], labels=labels)
+    reg.gauge("edgerag_recovery_seconds",
+              "Wall seconds of the last recovery (0 = none ran)"
+              ).set(st["last_recovery_s"] or 0.0, labels=labels)
+    return reg
+
+
 def collect_router(reg: MetricsRegistry, router) -> MetricsRegistry:
     """Shared-substrate state from a :class:`TenantRouter`: per-tenant
     cache hits/misses/bytes, storage bytes, maintenance backlog."""
@@ -301,6 +331,8 @@ def collect_router(reg: MetricsRegistry, router) -> MetricsRegistry:
         pend.set(len(ix.maintenance), labels=labels)
         medge.set(router.maintenance.per_tenant_edge_s.get(t, 0.0),
                   labels=labels)
+        if ix.durability is not None:
+            collect_durability(reg, ix.durability, labels=labels)
     reg.gauge("edgerag_cache_capacity_bytes",
               "Shared cache byte budget").set(router.cache.capacity_bytes)
     reg.gauge("edgerag_memory_bytes",

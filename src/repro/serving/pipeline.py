@@ -70,6 +70,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.faults import DegradationPolicy
+from repro.core.maintenance import OP_CHECKPOINT
 from repro.serving.engine import BatchJob, RAGEngine, RAGResponse
 
 STAGES = ("s1", "s2", "s3", "s4")
@@ -102,6 +103,7 @@ class StageTrace:
     n_fired: int = 0               # batch firings (incl. replanned passes)
     maintenance_s: float = 0.0     # bubble seconds filled with drain work
     maintenance_ops: int = 0       # maintenance ops executed in bubbles
+    checkpoints: int = 0           # durability OP_CHECKPOINT ops among them
     max_queue_depth: int = 0       # most batches ever waiting on this stage
     intervals: List[Tuple[float, float]] = \
         dataclasses.field(default_factory=list)
@@ -110,6 +112,7 @@ class StageTrace:
         return {"busy_s": self.busy_s, "n_fired": self.n_fired,
                 "maintenance_s": self.maintenance_s,
                 "maintenance_ops": self.maintenance_ops,
+                "checkpoints": self.checkpoints,
                 "max_queue_depth": self.max_queue_depth}
 
 
@@ -306,6 +309,12 @@ class StagedPipeline:
                 rep = sched.drain(gap, strict=True)
                 st.maintenance_s += rep.edge_s
                 st.maintenance_ops += rep.n_executed
+                # durability checkpoints ride the same bubbles; they bump
+                # no generation stamp, so in-flight plans never go stale
+                # behind one (the S3 replan gate compares
+                # content_generation, which a snapshot leaves untouched)
+                st.checkpoints += sum(
+                    1 for kind, _ in rep.executed if kind == OP_CHECKPOINT)
 
             if stage == "s1":
                 wait = fire - fl.batch.arrival_s

@@ -8,6 +8,7 @@ from repro.data import generate_dataset
 from repro.serving.engine import RAGEngine
 from repro.serving.metrics import (DEFAULT_BUCKETS, Counter, Gauge,
                                    Histogram, MetricsRegistry,
+                                   collect_durability,
                                    collect_pipeline_trace, collect_router,
                                    collect_scheduler)
 from repro.serving.pipeline import PipelineBatch, StagedPipeline
@@ -192,3 +193,66 @@ def test_collect_pipeline_trace_and_router():
     # one registry renders all three collectors without duplicate blocks
     text = reg.render()
     assert text.count("# TYPE edgerag_stage_busy_seconds") == 1
+
+
+def test_collect_durability_fields(tmp_path):
+    """collect_durability mirrors Durability.stats() exactly: WAL record
+    and byte counters, snapshot/compaction counters, modeled fsync edge
+    seconds, and the last-recovery gauge (0 until a recovery ran)."""
+    from repro.core import Durability, EdgeRAGIndex
+    ds = generate_dataset(n_records=80, dim=16, n_topics=4, n_queries=2,
+                          seed=31)
+    ix = EdgeRAGIndex(16, ds.embedder, ds.get_chunks, slo_s=0.004,
+                      storage_mode="disk", storage_root=str(tmp_path),
+                      maintenance="sync")
+    ix.build(ds.chunk_ids, ds.texts, nlist=4, embeddings=ds.embeddings)
+    dur = ix.attach_durability(Durability(str(tmp_path), cost_model=None,
+                                          checkpoint_every=3))
+    for j in range(5):
+        ds.add_chunk(9_000 + j, f"fresh chunk {j} " * 20)
+        ix.insert(9_000 + j, f"fresh chunk {j} " * 20)
+    st = dur.stats()
+    assert st["wal_records_total"] == 5 and st["snapshots_total"] >= 2
+    reg = MetricsRegistry()
+    collect_durability(reg, dur)
+    assert reg.get("edgerag_wal_records_total").value() == 5
+    assert (reg.get("edgerag_wal_bytes").value() == st["wal_bytes"]
+            == dur.wal.nbytes())
+    assert (reg.get("edgerag_snapshots_total").value()
+            == st["snapshots_total"])
+    assert (reg.get("edgerag_wal_compactions_total").value()
+            == st["wal_compactions_total"])
+    assert (reg.get("edgerag_wal_fsync_edge_seconds_total").value()
+            == pytest.approx(st["fsync_edge_s_total"])) and \
+        st["fsync_edge_s_total"] > 0.0
+    assert reg.get("edgerag_recovery_seconds").value() == 0.0  # none ran
+    text = reg.render()
+    assert "# TYPE edgerag_wal_records_total counter" in text
+    assert "# TYPE edgerag_recovery_seconds gauge" in text
+
+
+def test_collect_router_emits_per_tenant_durability(tmp_path):
+    """With router durability enabled, collect_router labels every
+    durability series by tenant; without it, the series are absent."""
+    cost = EdgeCostModel()
+    corpora = [generate_dataset(n_records=200, dim=32, n_topics=6,
+                                n_queries=2, seed=70 + t) for t in range(2)]
+    router, _ = _serving_stack(corpora, cost)
+    reg0 = MetricsRegistry()
+    collect_router(reg0, router)
+    assert "edgerag_wal_records_total" not in reg0
+    router.enable_durability(str(tmp_path), checkpoint_every=100)
+    for t, ds in zip(("t0", "t1"), corpora):
+        ds.add_chunk(5_000, "tenant-local new chunk " * 10)
+        router.tenants[t].insert(5_000, "tenant-local new chunk " * 10)
+    reg = MetricsRegistry()
+    collect_router(reg, router)
+    for t in ("t0", "t1"):
+        labels = {"tenant": t}
+        st = router.tenants[t].durability.stats()
+        assert (reg.get("edgerag_wal_records_total").value(labels)
+                == st["wal_records_total"] >= 1)
+        assert (reg.get("edgerag_snapshots_total").value(labels)
+                == st["snapshots_total"] >= 1)   # enable() baselines
+        assert (reg.get("edgerag_wal_bytes").value(labels)
+                == st["wal_bytes"] > 0)

@@ -287,6 +287,65 @@ def test_shared_budget_refuses_put(tmp_path):
     assert s.total_bytes() == 3 * emb.nbytes
 
 
+def test_clear_removes_codebook_file_and_stale_tmps(tmp_path):
+    """Regression: clear() used to leave the persisted pq_codebook.npz and
+    crashed-put ``.tmp`` files on disk — a rebuild on the root would decode
+    against the stale codebook version and trip over torn garbage.  Only
+    OUR tmp names are swept; foreign files stay untouched."""
+    s = StorageBackend("disk", root=str(tmp_path), codec="pq")
+    s.put(0, _emb(n=40))                 # lazy-trains + persists codebook
+    cb = tmp_path / "pq_codebook.npz"
+    assert cb.exists()
+    tdir = tmp_path / "tenant_a"
+    tdir.mkdir()
+    stale = [tmp_path / "cluster_7.npz.tmp", tmp_path / "pq_codebook.npz.tmp",
+             tdir / "cluster_0.npz.tmp"]
+    foreign = [tmp_path / "backup.npz.tmp", tmp_path / "notes.tmp"]
+    for p in stale + foreign:
+        p.write_bytes(b"torn")
+    s.clear()
+    assert not cb.exists()               # no leftover codebook version
+    assert not any(p.exists() for p in stale)
+    assert all(p.exists() for p in foreign)
+    assert s.pq is not None              # in-memory codebook survives:
+    v = s.pq.version                     # rebuild's retrain bumps it
+    s.train_pq(_emb(n=40, seed=3))
+    assert s.pq.version > v
+
+
+def test_delete_sweeps_stranded_tmp(tmp_path):
+    """Regression: a put that crashed mid-write strands ``<blob>.tmp``;
+    delete() must take the temp file down with the blob."""
+    s = StorageBackend("disk", root=str(tmp_path))
+    s.put(3, _emb(n=5))
+    tmp = tmp_path / "cluster_3.npz.tmp"
+    tmp.write_bytes(b"torn half-write")
+    s.delete(3)
+    assert not (tmp_path / "cluster_3.npz").exists()
+    assert not tmp.exists()
+    s.delete(3)                          # idempotent on a gone key
+
+
+@pytest.mark.parametrize("mode", ["memory", "disk"])
+def test_payload_crc_no_payload_read(mode, tmp_path):
+    """payload_crc returns the put-time checksum without decoding the
+    payload; a fresh instance on an old root lazily reads just the crc
+    member; absent keys raise KeyError."""
+    root = str(tmp_path) if mode == "disk" else None
+    s = StorageBackend(mode, root=root)
+    emb = _emb(n=8, seed=4)
+    s.put(2, emb)
+    crc = s.payload_crc(2)
+    assert crc == s.payload_crc(2)       # cached, stable
+    if mode == "disk":
+        b = StorageBackend(mode, root=root)
+        assert b.payload_crc(2) == crc   # lazy member read on reopen
+    with pytest.raises(KeyError):
+        s.payload_crc(99)
+    s.put(2, _emb(n=8, seed=5))          # re-put changes the content...
+    assert s.payload_crc(2) != crc       # ...and therefore the crc
+
+
 def test_tenant_view_scopes_keys_and_clear(tmp_path):
     shared = StorageBackend("disk", root=str(tmp_path))
     from repro.core.storage import TenantStorageView
